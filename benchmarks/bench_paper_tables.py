@@ -1,0 +1,283 @@
+"""One function per paper table/figure (deliverable d).
+
+Each returns CSV rows (name, us_per_call, derived). `us_per_call` is the
+wall-time of evaluating the model/bench itself; `derived` carries the
+table's headline quantity and its validation against the paper's claims.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import paper_model as pm
+from benchmarks.common import row
+from repro.core import dse, roofsurface as rs
+from repro.core.formats import get_spec
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+# -- Table 1: FC-GeMM fraction of next-token time ---------------------------
+
+def bench_table1() -> List[Dict[str, str]]:
+    rows = []
+    for profile in (rs.SPR_DDR, rs.SPR_HBM):
+        for batch in (1, 4, 16):
+            for ctx in (32, 128):
+                def frac():
+                    total = pm.next_token_latency_s(
+                        "llama2-70b", None, "optimal", profile,
+                        ctx=ctx, batch=batch,
+                    )
+                    other = pm.other_time_s("llama2-70b", ctx, batch, profile)
+                    return (total - other) / total
+
+                f, us = _timed(frac)
+                rows.append(row(
+                    f"table1/{profile.name}/b{batch}/ctx{ctx}", us,
+                    f"fc_fraction={f:.3f}",
+                ))
+    return rows
+
+
+# -- Figure 3: classic 2D roofline, Observed vs Optimal ----------------------
+
+def bench_fig3() -> List[Dict[str, str]]:
+    rows = []
+    for profile in (rs.SPR_DDR, rs.SPR_HBM):
+        worst = 1.0
+        for name in pm.EVAL_SCHEMES:
+            def ratio():
+                opt = pm.optimal_flops(name, profile, n=4)
+                obs = pm.sw_point(name, profile, n=4).flops
+                return opt / obs
+
+            r, us = _timed(ratio)
+            worst = max(worst, r)
+            rows.append(row(
+                f"fig3/{profile.name}/{name}", us, f"optimal_over_observed={r:.2f}"
+            ))
+        rows.append(row(
+            f"fig3/{profile.name}/max_divergence", 0.0,
+            f"max={worst:.2f} (paper: 4.94x on HBM for bf8_5)",
+        ))
+    return rows
+
+
+# -- Figure 4b: R-L vs R-S predictions ---------------------------------------
+
+def bench_fig4() -> List[Dict[str, str]]:
+    rows = []
+    for name in pm.EVAL_SCHEMES:
+        def preds():
+            rl = pm.optimal_flops(name, rs.SPR_HBM, n=4) / 1e12
+            rsur = pm.sw_point(name, rs.SPR_HBM, n=4).flops / 1e12
+            return rl, rsur
+
+        (rl, rsur), us = _timed(preds)
+        rows.append(row(
+            f"fig4/{name}", us, f"R-L={rl:.2f}T R-S={rsur:.2f}T"
+        ))
+    return rows
+
+
+# -- Figures 5/6: BORD region classification ---------------------------------
+
+def bench_fig5() -> List[Dict[str, str]]:
+    rows = []
+    cases = [
+        ("HBM", rs.SPR_HBM),
+        ("DDR", rs.SPR_DDR),
+        ("HBM_4xVOS", rs.SPR_HBM.scaled(vos_mult=4.0)),
+    ]
+    for label, profile in cases:
+        def classify():
+            return {n: pm.sw_point(n, profile).bound for n in pm.EVAL_SCHEMES}
+
+        bounds, us = _timed(classify)
+        n_vec = sum(b == "VEC" for b in bounds.values())
+        detail = " ".join(f"{k}:{v}" for k, v in bounds.items())
+        rows.append(row(f"fig5/{label}", us, f"vec_bound={n_vec}/9 {detail}"))
+    return rows
+
+
+# -- Figures 12/13: compressed-GeMM speedups ---------------------------------
+
+def bench_fig12_13() -> List[Dict[str, str]]:
+    rows = []
+    for profile, fig in ((rs.SPR_DDR, "fig12"), (rs.SPR_HBM, "fig13")):
+        base = pm.sw_point("bf16_100", profile, n=1).flops
+        best_deca = 0.0
+        for name in pm.EVAL_SCHEMES:
+            def speeds():
+                sw = pm.sw_point(name, profile, n=1).flops / base
+                deca = pm.deca_point(name, profile, n=1).flops / base
+                opt = pm.optimal_flops(name, profile, n=1) / base
+                return sw, deca, opt
+
+            (sw, deca, opt), us = _timed(speeds)
+            best_deca = max(best_deca, deca / max(sw, 1e-9))
+            rows.append(row(
+                f"{fig}/{profile.name}/{name}", us,
+                f"sw={sw:.2f}x deca={deca:.2f}x optimal={opt:.2f}x",
+            ))
+        claim = "1.7x" if fig == "fig12" else "4.0x"
+        rows.append(row(
+            f"{fig}/{profile.name}/max_deca_over_sw", 0.0,
+            f"max={best_deca:.2f}x (paper: up to {claim})",
+        ))
+    return rows
+
+
+# -- Figure 14: TFLOPs vs core count ------------------------------------------
+
+def bench_fig14() -> List[Dict[str, str]]:
+    rows = []
+    for cores in (8, 16, 24, 32, 40, 48, 56):
+        def tflops():
+            mult = cores / 56.0
+            prof = rs.SPR_DDR.scaled(cores_mult=mult)
+            prof_deca = rs.deca_profile(rs.SPR_DDR, cores=cores)
+            # DDR bandwidth does not scale with cores: restore it
+            import dataclasses
+
+            prof = dataclasses.replace(prof, mbw=rs.SPR_DDR.mbw)
+            conv = np.mean([pm.sw_point(n, prof, 4).flops
+                            for n in pm.EVAL_SCHEMES])
+            deca = np.mean([
+                rs.evaluate(get_spec(n), prof_deca,
+                            ai_xv=rs.deca_ai_xv(get_spec(n)), batch_n=4).flops
+                for n in pm.EVAL_SCHEMES
+            ])
+            return conv / 1e12, deca / 1e12
+
+        (conv, deca), us = _timed(tflops)
+        rows.append(row(
+            f"fig14/cores{cores}", us, f"conventional={conv:.2f}T deca={deca:.2f}T"
+        ))
+    return rows
+
+
+# -- Figure 15: DECA vs traditional vector scaling ----------------------------
+
+def bench_fig15() -> List[Dict[str, str]]:
+    rows = []
+    import dataclasses
+
+    for name in pm.EVAL_SCHEMES:
+        def alts():
+            spec = get_spec(name)
+            base = pm.sw_point(name, rs.SPR_HBM, 1).flops
+            more_units = rs.evaluate(
+                spec, rs.SPR_HBM.scaled(vos_mult=4.0), batch_n=1
+            ).flops
+            # wider AVX: 3/4 of the compute vops disappear; the per-cache-line
+            # memory ops remain (paper models AVX2048 ops as 4 line-ops)
+            vops = rs.software_vops_per_tile(spec)
+            load_ops = 16 * (32 * spec.density * spec.bits / 8.0) / 64.0
+            wide_vops = load_ops + (vops / 16 - load_ops / 16) * 4  # per row /4
+            wide = rs.evaluate(
+                spec, rs.SPR_HBM, ai_xv=1.0 / (wide_vops * 16 / 16), batch_n=1
+            ).flops
+            deca = pm.deca_point(name, rs.SPR_HBM, 1).flops
+            return more_units / base, wide / base, deca / base
+
+        (mu, wd, dc), us = _timed(alts)
+        rows.append(row(
+            f"fig15/{name}", us,
+            f"4x_units={mu:.2f}x 4x_wider={wd:.2f}x deca={dc:.2f}x",
+        ))
+    return rows
+
+
+# -- Figure 16 / §9.2: {W, L} design-space exploration ------------------------
+
+def bench_fig16() -> List[Dict[str, str]]:
+    def run():
+        res = dse.sweep_wl()
+        best = dse.best_wl(res)
+        by = {(r.w, r.l): r for r in res}
+        return best, by
+
+    (best, by), us = _timed(run)
+    rows = [row(
+        "fig16/best", us,
+        f"W={best.w} L={best.l} (paper: W=32 L=8)",
+    )]
+    rows.append(row(
+        "fig16/under_8_4", 0.0,
+        f"best/under={by[(best.w, best.l)].mean_tps / by[(8, 4)].mean_tps:.2f}x "
+        f"(paper: 2x)",
+    ))
+    rows.append(row(
+        "fig16/over_64_64", 0.0,
+        f"over/best={by[(64, 64)].mean_tps / by[(best.w, best.l)].mean_tps:.3f}x "
+        f"(paper: <1.03x)",
+    ))
+    return rows
+
+
+# -- Table 3: component utilization -------------------------------------------
+
+def bench_table3() -> List[Dict[str, str]]:
+    rows = []
+    for dens in (100, 50, 20, 5):
+        name = f"bf8_{dens}"
+
+        def utils():
+            spec = get_spec(name)
+            sw = pm.sw_point(name, rs.SPR_HBM, 1)
+            dp = pm.deca_point(name, rs.SPR_HBM, 1)
+            out = {}
+            for tag, pt in (("sw", sw), ("deca", dp)):
+                out[tag] = {
+                    "MEM": pt.tps / pt.rates["MEM"],
+                    "TMUL": pt.tps / pt.rates["MTX"],
+                    "VEC": pt.tps / pt.rates["VEC"],
+                }
+            return out
+
+        u, us = _timed(utils)
+        rows.append(row(
+            f"table3/q8_{dens}", us,
+            f"sw[mem={u['sw']['MEM']:.0%} tmul={u['sw']['TMUL']:.0%} "
+            f"avx={u['sw']['VEC']:.0%}] "
+            f"deca[mem={u['deca']['MEM']:.0%} tmul={u['deca']['TMUL']:.0%} "
+            f"deca={u['deca']['VEC']:.0%}]",
+        ))
+    return rows
+
+
+# -- Table 4: end-to-end next-token latency -----------------------------------
+
+def bench_table4() -> List[Dict[str, str]]:
+    rows = []
+    schemes = ["bf8_100", "bf8_20", "bf8_5", "mxfp4_100"]
+    for arch in ("llama2-70b", "opt-66b"):
+        for batch in (1, 16):
+            base_ms = pm.next_token_latency_s(
+                arch, None, "optimal", rs.SPR_HBM, batch=batch
+            ) * 1e3
+            for name in schemes:
+                def latencies():
+                    sw = pm.next_token_latency_s(
+                        arch, name, "sw", rs.SPR_HBM, batch=batch
+                    ) * 1e3
+                    deca = pm.next_token_latency_s(
+                        arch, name, "deca", rs.SPR_HBM, batch=batch
+                    ) * 1e3
+                    return sw, deca
+
+                (sw, deca), us = _timed(latencies)
+                rows.append(row(
+                    f"table4/{arch}/b{batch}/{name}", us,
+                    f"bf16={base_ms:.1f}ms sw={sw:.1f}ms deca={deca:.1f}ms "
+                    f"speedup_sw={sw / deca:.2f}x speedup_bf16={base_ms / deca:.2f}x",
+                ))
+    return rows

@@ -1,0 +1,29 @@
+"""Benchmark helpers: wall-clock timing of jitted callables + CSV rows."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+
+
+def time_jitted(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time (us) of a jitted callable, post-warmup."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us: float, derived: str) -> Dict[str, str]:
+    return {"name": name, "us_per_call": f"{us:.2f}", "derived": derived}
+
+
+def emit(rows: List[Dict[str, str]]) -> None:
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")

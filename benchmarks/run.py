@@ -1,0 +1,41 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (deliverable d). The paper-table
+benches evaluate the validated Roof-Surface analytical model on the paper's
+SPR profiles; the tpu_fused benches measure wall-clock on this machine.
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks import bench_paper_tables as pt
+from benchmarks import bench_tpu_fused as tf
+from benchmarks.common import emit
+
+ALL = [
+    ("table1", pt.bench_table1),
+    ("fig3", pt.bench_fig3),
+    ("fig4", pt.bench_fig4),
+    ("fig5", pt.bench_fig5),
+    ("fig12_13", pt.bench_fig12_13),
+    ("fig14", pt.bench_fig14),
+    ("fig15", pt.bench_fig15),
+    ("fig16", pt.bench_fig16),
+    ("table3", pt.bench_table3),
+    ("table4", pt.bench_table4),
+    ("tpu_fused", tf.bench_fused_vs_unfused),
+    ("pallas_interpret", tf.bench_pallas_interpret_correctness),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, fn in ALL:
+        if only and only != name:
+            continue
+        emit(fn())
+
+
+if __name__ == "__main__":
+    main()

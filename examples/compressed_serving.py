@@ -1,0 +1,57 @@
+"""End-to-end driver (deliverable b): serve a small model with batched
+requests and DECA-compressed weights.
+
+Builds a llama3-family model, compresses every FC weight to MXFP4 (the
+paper's Q4), and serves a batch of prompts through the generation engine —
+prefill + KV-cached decode, with every FC matmul running the
+decompress-on-the-fly GeMM. Reports compression factor and tokens/s.
+
+Run:  PYTHONPATH=src python examples/compressed_serving.py [--format bf8_50]
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+
+from repro.configs.base import get_smoke_config
+from repro.core.decompress import compress_tree, compressed_bytes
+from repro.core.formats import get_spec
+from repro.models.model import Model
+from repro.serve.engine import GenerationEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--format", default="mxfp4_100")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("llama3-8b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dense_bytes = compressed_bytes(params)
+
+    spec = get_spec(args.format)
+    cparams = compress_tree(params, spec)
+    comp_bytes = compressed_bytes(cparams)
+    print(f"model: {cfg.name}  weights {dense_bytes/1e6:.2f} MB -> "
+          f"{comp_bytes/1e6:.2f} MB (CF={dense_bytes/comp_bytes:.2f}, "
+          f"scheme CF={spec.compression_factor():.2f})")
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (args.batch, 16)).astype(np.int32)
+
+    engine = GenerationEngine(model, cparams, max_len=128, temperature=0.0)
+    t0 = time.perf_counter()
+    out = engine.generate(prompts, args.steps)
+    dt = time.perf_counter() - t0
+    tps = args.batch * args.steps / dt
+    print(f"generated {out.shape} tokens in {dt:.2f}s  ({tps:.1f} tok/s, "
+          f"batched decode with compressed weights)")
+    print("sample:", out[0][:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

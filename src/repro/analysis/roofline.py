@@ -1,0 +1,144 @@
+"""Roofline-term extraction from compiled XLA artifacts (§Roofline).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+cost_analysis() provides FLOPs/bytes; collective bytes are parsed from the
+optimized HLO text: for every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute we account the op's result size (per
+participating chip), with all-reduce counted twice (ring = reduce-scatter +
+all-gather). Hardware constants per the assignment: 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]+(?:e[0-9]+m[0-9]+)?|pred)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of all shape literals in `text` (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    """(total_bytes, per-op-kind breakdown) from optimized HLO text.
+
+    Counts each collective's result size; all-reduce x2 (rs + ag phases).
+    Sizes in post-SPMD HLO are already per-shard, i.e. per chip.
+    """
+    per_kind: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if " = " not in stripped or "(" not in stripped:
+            continue
+        _, rhs = stripped.split(" = ", 1)
+        head = rhs.split("(")[0].strip()   # "<result type> <opcode>"
+        tokens = head.split()
+        if not tokens:
+            continue
+        opcode = tokens[-1]
+        kind = next((c for c in _COLLECTIVES if opcode.startswith(c)), None)
+        if kind is None or opcode.endswith("-done"):
+            continue  # -done carries the same type as -start: count once
+        size = _shape_bytes(" ".join(tokens[:-1]))
+        if kind == "all-reduce":
+            size *= 2  # ring all-reduce = reduce-scatter + all-gather
+        per_kind[kind] += size
+    return sum(per_kind.values()), per_kind
+
+
+@dataclasses.dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    hlo_flops: float          # per-chip (cost_analysis of the SPMD module)
+    hlo_bytes: float          # per-chip
+    coll_bytes: float         # per-chip
+    model_flops: float        # analytic 6*N*D (or 6*N_active*D)
+    per_device_mem: float     # bytes, from memory_analysis
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "MTX": self.t_compute,
+            "MEM": self.t_memory,
+            "ICI": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs — remat/redundancy waste detector."""
+        total_hlo = self.hlo_flops * self.n_chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute throughput at the bound, / peak (an MFU analogue)."""
+        if self.t_bound <= 0:
+            return 0.0
+        return self.model_flops / (self.t_bound * self.n_chips * PEAK_FLOPS)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic useful FLOPs per step: 6*N_active*D for train (fwd+bwd),
+    2*N_active*D for inference steps. D = tokens processed this step."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one new token per sequence
+    return 2.0 * n * tokens

@@ -1,0 +1,185 @@
+"""Offline model compression (paper Fig. 1, left side).
+
+``compress(w, spec)`` sparsifies (per-group top-|w|), quantizes, and packs a
+2D weight into the DECA storage triplet {codes, mask, scales}. Runs in numpy
+on the host — compression is offline in the paper; only *decompression* is
+on the inference critical path.
+
+Number formats:
+  bf8    E5M2 — exactly the high byte of IEEE binary16 (like bf16 is the
+         high half of binary32). Quantize = RNE-truncate fp16 to 8 bits.
+  mxfp4  OCP MX FP4 (E2M1) with a shared E8M0 scale per 32 elements.
+  int8/4 symmetric integer with a per-group bf16 scale.
+  bf16   no quantization (sparsity only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+from .formats import CompressionSpec
+
+# E2M1 magnitude grid (sign handled separately): code 0..7.
+FP4_GRID = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], dtype=np.float32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CompressedTensor:
+    """Packed compressed weight of logical shape (K, N).
+
+    codes : (ng, k_cap*bits/8, N) uint8   packed quantized nonzeros
+            (bf16 codes are stored as 2 bytes little-endian)
+    mask  : (ng, N) uint32 or None        per-group bitmask (bit i = row g*G+i)
+    scales: (ng, N) uint8|uint16 or None  E8M0 (mxfp4) / bf16-bits (int8/4)
+    """
+
+    codes: jax.Array
+    mask: Optional[jax.Array]
+    scales: Optional[jax.Array]
+    spec: CompressionSpec
+    shape: Tuple[int, int]  # logical (K, N)
+
+    def tree_flatten(self):
+        return (self.codes, self.mask, self.scales), (self.spec, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def nbytes(self) -> int:
+        total = self.codes.size  # uint8
+        if self.mask is not None:
+            total += self.mask.size * 4
+        if self.scales is not None:
+            total += self.scales.size * self.scales.dtype.itemsize
+        return int(total)
+
+
+# ---------------------------------------------------------------------------
+# quantizers (numpy, offline)
+# ---------------------------------------------------------------------------
+
+def quantize_bf8(x: np.ndarray) -> np.ndarray:
+    """f32 -> E5M2 code (uint8), round-to-nearest-even via fp16 bits."""
+    h = x.astype(np.float16).view(np.uint16).astype(np.uint32)
+    lower, upper = h & 0xFF, h >> 8
+    round_up = (lower > 0x80) | ((lower == 0x80) & (upper & 1 == 1))
+    code = upper + round_up
+    # avoid rounding a finite value into inf (exp=31, man=0)
+    overflow = (code & 0x7F) == 0x7C
+    code = np.where(overflow & ((upper & 0x7F) < 0x7C), upper, code)
+    return code.astype(np.uint8)
+
+
+def dequantize_bf8(code: np.ndarray) -> np.ndarray:
+    return (code.astype(np.uint16) << 8).view(np.float16).astype(np.float32)
+
+
+def quantize_fp4(x: np.ndarray) -> np.ndarray:
+    """f32 (already divided by group scale) -> E2M1 code (uint8 in [0,16))."""
+    sign = (x < 0).astype(np.uint8)
+    mag = np.abs(x.astype(np.float32))
+    idx = np.argmin(np.abs(mag[..., None] - FP4_GRID), axis=-1).astype(np.uint8)
+    return (sign << 3) | idx
+
+
+def dequantize_fp4(code: np.ndarray) -> np.ndarray:
+    mag = FP4_GRID[code & 0x7]
+    return np.where(code >> 3 == 1, -mag, mag)
+
+
+def _f32_to_bf16_bits(x: np.ndarray) -> np.ndarray:
+    b = x.astype(np.float32).view(np.uint32)
+    b = b + 0x7FFF + ((b >> 16) & 1)  # RNE
+    return (b >> 16).astype(np.uint16)
+
+
+def _bf16_bits_to_f32(b: np.ndarray) -> np.ndarray:
+    return (b.astype(np.uint32) << 16).view(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# compression pipeline
+# ---------------------------------------------------------------------------
+
+def _sparsify_groups(wg: np.ndarray, k_cap: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-group top-|w| pruning.
+
+    wg: (ng, G, N). Returns (values (ng, k_cap, N) packed-dense along axis 1,
+    mask (ng, N) uint32 with bit i set iff element i is kept).
+    """
+    ng, G, N = wg.shape
+    order = np.argsort(-np.abs(wg), axis=1, kind="stable")  # (ng, G, N)
+    keep_rank = np.empty_like(order)
+    np.put_along_axis(keep_rank, order, np.arange(G)[None, :, None], axis=1)
+    keep = keep_rank < k_cap  # (ng, G, N) bool
+    bits = keep.astype(np.uint32) << np.arange(G, dtype=np.uint32)[None, :, None]
+    mask = bits.sum(axis=1, dtype=np.uint32)  # (ng, N)
+    # pack kept values contiguously (in original order), pad with 0
+    vals = np.zeros((ng, k_cap, N), dtype=wg.dtype)
+    pos = np.cumsum(keep, axis=1) - 1  # destination slot for kept elems
+    gi, _, ni = np.meshgrid(np.arange(ng), np.arange(G), np.arange(N), indexing="ij")
+    sel = keep
+    vals[gi[sel], pos[sel], ni[sel]] = wg[sel]
+    return vals, mask
+
+
+def compress(w: np.ndarray, spec: CompressionSpec) -> CompressedTensor:
+    """Compress a 2D weight (K, N) along K. K must be a multiple of group."""
+    w = np.asarray(w, dtype=np.float32)
+    if w.ndim != 2:
+        raise ValueError(f"compress expects 2D weights, got {w.shape}")
+    K, N = w.shape
+    G = spec.group
+    if K % G != 0:
+        raise ValueError(f"K={K} not a multiple of group={G}")
+    ng = K // G
+    wg = w.reshape(ng, G, N)
+
+    mask = None
+    if spec.is_sparse:
+        vals, mask = _sparsify_groups(wg, spec.k_cap)  # (ng, k_cap, N)
+    else:
+        vals = wg  # k_cap == G
+
+    scales = None
+    if spec.quant == "mxfp4":
+        amax = np.abs(vals).max(axis=1)  # (ng, N)
+        e = np.floor(np.log2(np.maximum(amax, 2.0 ** -126)))
+        scale_exp = np.clip(e - 2.0, -127, 127)  # E2M1 emax = 2 (max elem 6.0)
+        scales = (scale_exp + 127).astype(np.uint8)  # E8M0
+        q = vals / (2.0 ** scale_exp)[:, None, :]
+        codes4 = quantize_fp4(q)  # (ng, k_cap, N) in [0,16)
+        codes = (codes4[:, 0::2, :] | (codes4[:, 1::2, :] << 4)).astype(np.uint8)
+    elif spec.quant in ("int8", "int4"):
+        qmax = 127 if spec.quant == "int8" else 7
+        amax = np.abs(vals).max(axis=1)
+        scale = np.maximum(amax / qmax, 1e-12)
+        scales = _f32_to_bf16_bits(scale)  # uint16 bf16-bits
+        scale = _bf16_bits_to_f32(scales)  # use the *stored* scale
+        q = np.clip(np.rint(vals / scale[:, None, :]), -qmax, qmax).astype(np.int32)
+        if spec.quant == "int8":
+            codes = (q & 0xFF).astype(np.uint8)
+        else:
+            u = (q & 0xF).astype(np.uint8)  # two's-complement nibble
+            codes = (u[:, 0::2, :] | (u[:, 1::2, :] << 4)).astype(np.uint8)
+    elif spec.quant == "bf8":
+        codes = quantize_bf8(vals)
+    elif spec.quant == "bf16":
+        b = _f32_to_bf16_bits(vals)  # (ng, k_cap, N) uint16
+        codes = np.stack([b & 0xFF, b >> 8], axis=2).reshape(ng, -1, N).astype(np.uint8)
+    else:  # pragma: no cover
+        raise AssertionError(spec.quant)
+
+    return CompressedTensor(
+        codes=np.ascontiguousarray(codes),
+        mask=mask,
+        scales=scales,
+        spec=spec,
+        shape=(K, N),
+    )

@@ -1,0 +1,115 @@
+"""Design-space exploration with the Roof-Surface model (paper §9.2).
+
+Two DSEs:
+  1. The paper's {W, L} sweep for the DECA PE: pick the smallest pair for
+     which no kernel is VEC-bound (best = {32, 8}).
+  2. A Pallas block-parameter sweep for the fused TPU kernel: pick
+     (block_m, block_n, block_k) that fits VMEM and maximizes MXU-aligned
+     arithmetic intensity (used by the §Perf hillclimb).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import roofsurface as rs
+from .formats import CompressionSpec, PAPER_SCHEMES
+
+
+@dataclasses.dataclass(frozen=True)
+class DSEResult:
+    w: int
+    l: int
+    n_vec_bound: int
+    mean_tps: float
+    cost: float  # relative hardware cost proxy
+
+
+def _deca_cost(w: int, l: int) -> float:
+    """Area proxy: W scales the datapath/XBAR, L the LUT array (22% of area
+    at L=8 per paper §8)."""
+    return w / 32.0 * 0.78 + l / 8.0 * 0.22
+
+
+def sweep_wl(
+    schemes: Sequence[CompressionSpec] = tuple(PAPER_SCHEMES),
+    profile: rs.HardwareProfile = rs.SPR_HBM,
+    ws: Sequence[int] = (8, 16, 32, 64),
+    ls: Sequence[int] = (4, 8, 16, 32, 64),
+) -> List[DSEResult]:
+    results = []
+    for w in ws:
+        for l in ls:
+            if l > w:
+                continue
+            prof = rs.deca_profile(profile)
+            pts = [
+                rs.evaluate(s, prof, ai_xv=rs.deca_ai_xv(s, w, l)) for s in schemes
+            ]
+            n_vec = sum(p.bound == "VEC" for p in pts)
+            mean_tps = sum(p.tps for p in pts) / len(pts)
+            results.append(DSEResult(w, l, n_vec, mean_tps, _deca_cost(w, l)))
+    return results
+
+
+def best_wl(results: Optional[List[DSEResult]] = None) -> DSEResult:
+    """Smallest-cost {W, L} with all kernels out of the VEC region."""
+    results = results if results is not None else sweep_wl()
+    ok = [r for r in results if r.n_vec_bound == 0]
+    if not ok:
+        return min(results, key=lambda r: (r.n_vec_bound, r.cost))
+    return min(ok, key=lambda r: r.cost)
+
+
+# ---------------------------------------------------------------------------
+# Pallas fused-kernel block DSE (TPU adaptation)
+# ---------------------------------------------------------------------------
+
+VMEM_BYTES = 16 * 1024 * 1024  # v5e VMEM per core
+
+
+def block_vmem_bytes(
+    spec: CompressionSpec, bm: int, bn: int, bk: int, batch_dtype_bytes: int = 2
+) -> int:
+    """VMEM working set of one fused-GeMM program (double-buffered inputs)."""
+    g = spec.group
+    x_bytes = bm * bk * batch_dtype_bytes
+    code_bytes = (bk // g) * spec.k_cap * bn * spec.bits // 8
+    mask_bytes = (bk // g) * 4 * bn if spec.is_sparse else 0
+    scale_bytes = (bk // g) * 2 * bn if spec.has_scale else 0
+    w_dense = bk * bn * 2          # decompressed tile (scratch)
+    out_bytes = bm * bn * 4        # f32 accumulator
+    # inputs are double-buffered by the Pallas pipeline
+    return 2 * (x_bytes + code_bytes + mask_bytes + scale_bytes) + w_dense + out_bytes
+
+
+def sweep_blocks(
+    spec: CompressionSpec,
+    m: int,
+    n: int,
+    k: int,
+    bms: Sequence[int] = (128, 256),
+    bns: Sequence[int] = (128, 256, 512),
+    bks: Sequence[int] = (256, 512, 1024, 2048),
+) -> List[Dict]:
+    """Enumerate feasible (bm, bn, bk); score by MXU alignment and reuse."""
+    out = []
+    for bm in bms:
+        for bn in bns:
+            for bk in bks:
+                if bm > m or bn > n or bk > k:
+                    continue
+                if k % bk or n % bn:
+                    continue
+                vmem = block_vmem_bytes(spec, bm, bn, bk)
+                if vmem > VMEM_BYTES:
+                    continue
+                # per-block compute / per-block HBM traffic (higher = better)
+                flops = bm * bn * bk
+                bytes_moved = (
+                    bm * bk * 2 + spec.bytes_for(bk, bn) + (bm * bn * 4) / (k // bk)
+                )
+                out.append(
+                    dict(bm=bm, bn=bn, bk=bk, vmem=vmem, ai=flops / bytes_moved)
+                )
+    return sorted(out, key=lambda d: -d["ai"])

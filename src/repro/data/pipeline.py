@@ -1,0 +1,61 @@
+"""Deterministic synthetic data pipeline.
+
+Produces seeded, host-shardable LM batches: each (step, host) slice is a
+pure function of (seed, step, host_id), so restarts and elastic re-runs
+regenerate identical data — the property checkpoint-restart tests rely on.
+Frontends (vlm/audio) get synthetic embeddings per the assignment's stub
+rule; labels are next-token targets (masked-prediction targets for the
+encoder family).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class SyntheticPipeline:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+
+    def __post_init__(self):
+        if self.shape.global_batch % self.n_hosts:
+            raise ValueError("global_batch must divide across hosts")
+        self.host_batch = self.shape.global_batch // self.n_hosts
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.host_id])
+        )
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        """One host-local batch for `step`."""
+        cfg, s = self.cfg, self.shape.seq_len
+        b = self.host_batch
+        rng = self._rng(step)
+        out: Dict[str, np.ndarray] = {}
+        # token stream: zipf-ish distribution to mimic natural vocab skew
+        ranks = rng.zipf(1.2, size=(b, s + 1)).astype(np.int64)
+        tokens = (ranks - 1) % cfg.vocab_size
+        if cfg.is_encoder:
+            out["labels"] = tokens[:, :s].astype(np.int32)
+        else:
+            out["labels"] = tokens[:, 1:].astype(np.int32)
+        if cfg.frontend != "none":
+            out["embeds"] = rng.standard_normal((b, s, cfg.d_model)).astype(
+                np.float32
+            ) * 0.02
+        else:
+            out["tokens"] = tokens[:, :s].astype(np.int32)
+        if cfg.mrope_sections:
+            pos = np.broadcast_to(np.arange(s, dtype=np.int32), (b, s))
+            out["positions"] = np.broadcast_to(pos, (3, b, s)).copy()
+        out["mask"] = np.ones((b, s), np.float32)
+        return out

@@ -1,0 +1,186 @@
+"""Pallas TPU kernel: DECA tile decompression (paper Fig. 11).
+
+Maps the DECA PE onto a TPU core:
+
+  DECA stage                      TPU kernel equivalent
+  ----------                      ---------------------
+  Loader (LDQ + prefetcher)       Pallas grid pipeline: HBM->VMEM DMA of the
+                                  next block overlaps compute (double-buffered
+                                  automatically — the TEPL/double-buffer analog)
+  Dequantization (LUT array)      ALU decode on the VPU: E5M2/E2M1 -> BF16 via
+                                  integer shift/mask/select (no per-lane LUT
+                                  SRAM on TPU; see DESIGN.md §2)
+  Expansion (prefix-sum + XBAR)   cumsum over the bitmask + take_along_axis
+  Scaling (BF16 multipliers)      per-group broadcast multiply
+  TOut registers                  VMEM output block
+
+Block geometry: a program decompresses a (block_k, block_n) dense output
+region from (block_k/G) groups. ``block_n`` should be a multiple of 128
+(lanes) and ``block_k`` a multiple of the group size (32) on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.compression import CompressedTensor
+from repro.core.formats import CompressionSpec
+
+
+# ---------------------------------------------------------------------------
+# in-kernel decode primitives (pure VPU ops — shifts, masks, selects)
+# ---------------------------------------------------------------------------
+
+def _decode_bf8(codes: jax.Array) -> jax.Array:
+    """uint8 E5M2 -> f32. E5M2 is the high byte of binary16."""
+    bits = codes.astype(jnp.uint16) << 8
+    return jax.lax.bitcast_convert_type(bits, jnp.float16).astype(jnp.float32)
+
+
+def _decode_fp4_mag(nib: jax.Array) -> jax.Array:
+    """E2M1 nibble (sign stripped) -> magnitude, pure ALU (no LUT).
+
+    value = m/2            if e == 0   (subnormal)
+          = (1 + m/2)*2^(e-1) otherwise
+    """
+    e = ((nib >> 1) & 0x3).astype(jnp.float32)
+    m = (nib & 0x1).astype(jnp.float32)
+    normal = (1.0 + 0.5 * m) * jnp.exp2(e - 1.0)
+    return jnp.where(e == 0.0, 0.5 * m, normal)
+
+
+def _decode_fp4(nib: jax.Array) -> jax.Array:
+    mag = _decode_fp4_mag(nib)
+    return jnp.where((nib >> 3) == 1, -mag, mag)
+
+
+def _unpack_nibbles(codes: jax.Array) -> jax.Array:
+    ng, kh, n = codes.shape
+    lo, hi = codes & 0xF, codes >> 4
+    return jnp.stack([lo, hi], axis=2).reshape(ng, kh * 2, n)
+
+
+def decode_values(codes: jax.Array, spec: CompressionSpec) -> jax.Array:
+    """(ng, packed, n) uint8 block -> (ng, k_cap, n) f32 values (in-kernel)."""
+    if spec.quant == "bf8":
+        return _decode_bf8(codes)
+    if spec.quant == "bf16":
+        lo = codes[:, 0::2, :].astype(jnp.uint16)
+        hi = codes[:, 1::2, :].astype(jnp.uint16)
+        return jax.lax.bitcast_convert_type(lo | (hi << 8), jnp.bfloat16).astype(
+            jnp.float32
+        )
+    if spec.quant == "mxfp4":
+        return _decode_fp4(_unpack_nibbles(codes))
+    if spec.quant == "int8":
+        return codes.astype(jnp.int8).astype(jnp.float32)
+    if spec.quant == "int4":
+        nib = _unpack_nibbles(codes).astype(jnp.int32)
+        return (nib - 16 * (nib >= 8)).astype(jnp.float32)
+    raise ValueError(spec.quant)
+
+
+def decode_scales(scales: jax.Array, spec: CompressionSpec) -> jax.Array:
+    if spec.quant == "mxfp4":  # E8M0
+        return jnp.exp2(scales.astype(jnp.float32) - 127.0)
+    return jax.lax.bitcast_convert_type(
+        scales.astype(jnp.uint16), jnp.bfloat16
+    ).astype(jnp.float32)
+
+
+def decompress_block(
+    codes: jax.Array,
+    mask: Optional[jax.Array],
+    scales: Optional[jax.Array],
+    spec: CompressionSpec,
+) -> jax.Array:
+    """Decompress one VMEM block -> (ng*G, n) f32 dense tile.
+
+    This is the full DECA pipeline body; shared by the standalone and the
+    fused GeMM kernels.
+    """
+    vals = decode_values(codes, spec)  # (ng, k_cap, n)
+    if scales is not None:
+        vals = vals * decode_scales(scales, spec)[:, None, :]
+    ng, _, n = vals.shape
+    if mask is None:
+        return vals.reshape(ng * spec.group, n)
+    shifts = jnp.arange(spec.group, dtype=jnp.uint32)[None, :, None]
+    bits = ((mask[:, None, :] >> shifts) & 1).astype(jnp.int32)  # (ng, G, n)
+    prefix = jnp.cumsum(bits, axis=1) - bits  # POPCNT/prefix-sum analog
+    idx = jnp.clip(prefix, 0, spec.k_cap - 1)
+    gathered = jnp.take_along_axis(vals, idx, axis=1)  # crossbar analog
+    dense = jnp.where(bits == 1, gathered, 0.0)
+    return dense.reshape(ng * spec.group, n)
+
+
+# ---------------------------------------------------------------------------
+# standalone decompression kernel
+# ---------------------------------------------------------------------------
+
+def _decompress_kernel(spec, out_dtype, *refs):
+    if spec.is_sparse and spec.has_scale:
+        codes_ref, mask_ref, scales_ref, out_ref = refs
+        mask, scales = mask_ref[...], scales_ref[...]
+    elif spec.is_sparse:
+        codes_ref, mask_ref, out_ref = refs
+        mask, scales = mask_ref[...], None
+    elif spec.has_scale:
+        codes_ref, scales_ref, out_ref = refs
+        mask, scales = None, scales_ref[...]
+    else:
+        codes_ref, out_ref = refs
+        mask, scales = None, None
+    dense = decompress_block(codes_ref[...], mask, scales, spec)
+    out_ref[...] = dense.astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_k", "block_n", "out_dtype", "interpret")
+)
+def decompress_pallas(
+    ct: CompressedTensor,
+    *,
+    block_k: int = 512,
+    block_n: int = 256,
+    out_dtype=jnp.bfloat16,
+    interpret: bool = True,
+) -> jax.Array:
+    """Decompress a CompressedTensor to a dense (K, N) array via Pallas."""
+    spec = ct.spec
+    K, N = ct.shape
+    G = spec.group
+    block_k = min(block_k, K)
+    block_n = min(block_n, N)
+    # shrink blocks until they tile the array exactly
+    while K % block_k:
+        block_k -= G
+    while N % block_n:
+        block_n -= 1
+    gb = block_k // G  # groups per block
+    ck = ct.codes.shape[1]  # packed bytes per group
+
+    grid = (K // block_k, N // block_n)
+    in_specs = [
+        pl.BlockSpec((gb, ck, block_n), lambda i, j: (i, 0, j)),
+    ]
+    operands = [ct.codes]
+    if spec.is_sparse:
+        in_specs.append(pl.BlockSpec((gb, block_n), lambda i, j: (i, j)))
+        operands.append(ct.mask)
+    if spec.has_scale:
+        in_specs.append(pl.BlockSpec((gb, block_n), lambda i, j: (i, j)))
+        operands.append(ct.scales)
+
+    return pl.pallas_call(
+        functools.partial(_decompress_kernel, spec, out_dtype),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_k, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((K, N), out_dtype),
+        interpret=interpret,
+    )(*operands)

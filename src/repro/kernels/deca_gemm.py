@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: fused decompress + GeMM (DECA + TMUL cooperation).
+
+The paper overlaps DECA's decompression with the core's AMX matmul through
+double buffering and the TEPL out-of-order invocation (paper §5). On TPU the
+same overlap is achieved *structurally*: this kernel decompresses a weight
+block in VMEM with VPU ops and immediately feeds it to the MXU, while the
+Pallas grid pipeline prefetches the next compressed block from HBM. The
+decompressed tile never exists in HBM — the analog of the paper's
+"+TOut Regs" integration (§9.3), where the core reads decompressed tiles
+straight from the accelerator's output registers instead of via L2.
+
+Grid = (M/bm, N/bn, K/bk), k innermost; the f32 output block is revisited
+across k steps and used as the accumulator.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.compression import CompressedTensor
+from repro.kernels.deca_decompress import decompress_block
+
+
+def _gemm_kernel(spec, *refs):
+    if spec.is_sparse and spec.has_scale:
+        x_ref, codes_ref, mask_ref, scales_ref, out_ref = refs
+        mask, scales = mask_ref[...], scales_ref[...]
+    elif spec.is_sparse:
+        x_ref, codes_ref, mask_ref, out_ref = refs
+        mask, scales = mask_ref[...], None
+    elif spec.has_scale:
+        x_ref, codes_ref, scales_ref, out_ref = refs
+        mask, scales = None, scales_ref[...]
+    else:
+        x_ref, codes_ref, out_ref = refs
+        mask, scales = None, None
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # DECA stage: VPU decompression of the (bk, bn) weight block in VMEM.
+    w = decompress_block(codes_ref[...], mask, scales, spec).astype(jnp.bfloat16)
+    # TMUL stage: MXU matmul on the freshly decompressed tile.
+    out_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.bfloat16), w, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def decompress_gemm_pallas(
+    x: jax.Array,
+    ct: CompressedTensor,
+    *,
+    block_m: int = 128,
+    block_n: int = 256,
+    block_k: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = True,
+) -> jax.Array:
+    """x (M, K) @ decompress(ct) (K, N) -> (M, N), decompression fused."""
+    spec = ct.spec
+    K, N = ct.shape
+    M = x.shape[0]
+    if x.shape[1] != K:
+        raise ValueError(f"x K dim {x.shape[1]} != weight K {K}")
+    G = spec.group
+
+    block_m = min(block_m, M)
+    block_k = min(block_k, K)
+    block_n = min(block_n, N)
+    while M % block_m:
+        block_m -= 1
+    while K % block_k:
+        block_k -= G
+    while N % block_n:
+        block_n -= 1
+    gb = block_k // G
+    ck = ct.codes.shape[1]
+
+    grid = (M // block_m, N // block_n, K // block_k)
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+        pl.BlockSpec((gb, ck, block_n), lambda i, j, k: (k, 0, j)),
+    ]
+    operands = [x, ct.codes]
+    if spec.is_sparse:
+        in_specs.append(pl.BlockSpec((gb, block_n), lambda i, j, k: (k, j)))
+        operands.append(ct.mask)
+    if spec.has_scale:
+        in_specs.append(pl.BlockSpec((gb, block_n), lambda i, j, k: (k, j)))
+        operands.append(ct.scales)
+
+    out = pl.pallas_call(
+        functools.partial(_gemm_kernel, spec),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(*operands)
+    return out.astype(out_dtype)

@@ -1,0 +1,65 @@
+"""Public jit'd entry points for DECA decompression ops.
+
+Dispatches between the Pallas kernels (TPU target; interpret-mode on CPU)
+and the pure-jnp reference path. The reference path is what the distributed
+model graphs use (it lowers to plain XLA HLO everywhere, including the
+512-device dry-run); the Pallas path is the TPU hot-spot implementation,
+validated bit-exactly against the reference in tests/.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import CompressedTensor
+from repro.kernels import ref
+from repro.kernels.deca_decompress import decompress_pallas
+from repro.kernels.deca_gemm import decompress_gemm_pallas
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def decompress(
+    ct: CompressedTensor,
+    *,
+    impl: str = "ref",
+    out_dtype=jnp.bfloat16,
+    **block_kwargs,
+) -> jax.Array:
+    """Decompress to a dense (K, N) array. impl: 'ref' | 'pallas'."""
+    if impl == "ref":
+        return ref.decompress(ct, out_dtype=out_dtype)
+    if impl == "pallas":
+        return decompress_pallas(
+            ct, out_dtype=out_dtype, interpret=_use_interpret(), **block_kwargs
+        )
+    raise ValueError(impl)
+
+
+def decompress_gemm(
+    x: jax.Array,
+    ct: CompressedTensor,
+    *,
+    impl: str = "ref",
+    out_dtype=jnp.float32,
+    **block_kwargs,
+) -> jax.Array:
+    """Fused-semantics compressed GeMM: x (..., K) @ W (K, N).
+
+    Leading dims of x are flattened to M. impl: 'ref' | 'pallas'.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if impl == "ref":
+        out = ref.decompress_gemm(x2, ct, out_dtype=out_dtype)
+    elif impl == "pallas":
+        out = decompress_gemm_pallas(
+            x2, ct, out_dtype=out_dtype, interpret=_use_interpret(), **block_kwargs
+        )
+    else:
+        raise ValueError(impl)
+    return out.reshape(*lead, out.shape[-1])

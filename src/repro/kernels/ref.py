@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for DECA decompression and compressed GeMM.
+
+These mirror the DECA PE pipeline (paper Fig. 11) stage by stage:
+  1. Dequantization  — code -> BF16 value (LUT array in hardware; exact
+                       ALU remaps here),
+  2. Expansion       — de-sparsification: prefix-sum over the bitmask
+                       (POPCNT + parallel-prefix + crossbar in hardware;
+                       cumsum + gather here),
+  3. Scaling         — per-group scale multiply (group quantization).
+
+Everything is jittable jnp; used as the correctness reference for the
+Pallas kernels and as the portable fallback path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import CompressedTensor, FP4_GRID
+from repro.core.formats import CompressionSpec
+
+_FP4_GRID_J = jnp.asarray(FP4_GRID, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# stage 1: dequantization
+# ---------------------------------------------------------------------------
+
+def dequant_codes(codes: jax.Array, spec: CompressionSpec) -> jax.Array:
+    """(ng, packed_k, N) uint8 -> (ng, k_cap, N) f32 unquantized values."""
+    if spec.quant == "bf8":
+        bits = codes.astype(jnp.uint16) << 8
+        return jax.lax.bitcast_convert_type(bits, jnp.float16).astype(jnp.float32)
+    if spec.quant == "bf16":
+        lo = codes[:, 0::2, :].astype(jnp.uint16)
+        hi = codes[:, 1::2, :].astype(jnp.uint16)
+        return jax.lax.bitcast_convert_type(lo | (hi << 8), jnp.bfloat16).astype(
+            jnp.float32
+        )
+    if spec.quant == "mxfp4":
+        nib = _unpack_nibbles(codes)
+        mag = jnp.take(_FP4_GRID_J, (nib & 0x7).astype(jnp.int32))
+        return jnp.where(nib >> 3 == 1, -mag, mag)
+    if spec.quant == "int8":
+        return codes.astype(jnp.int8).astype(jnp.float32)
+    if spec.quant == "int4":
+        nib = _unpack_nibbles(codes).astype(jnp.int32)
+        return (nib - 16 * (nib >= 8)).astype(jnp.float32)
+    raise ValueError(spec.quant)
+
+
+def _unpack_nibbles(codes: jax.Array) -> jax.Array:
+    """(ng, k/2, N) -> (ng, k, N), even k = low nibble, odd = high."""
+    ng, kh, n = codes.shape
+    lo, hi = codes & 0xF, codes >> 4
+    return jnp.stack([lo, hi], axis=2).reshape(ng, kh * 2, n)
+
+
+def dequant_scales(scales: jax.Array, spec: CompressionSpec) -> jax.Array:
+    """(ng, N) stored scales -> (ng, N) f32 multipliers."""
+    if spec.quant == "mxfp4":  # E8M0
+        return jnp.exp2(scales.astype(jnp.float32) - 127.0)
+    # bf16-bits
+    return jax.lax.bitcast_convert_type(
+        scales.astype(jnp.uint16), jnp.bfloat16
+    ).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# stage 2 + 3: expansion (de-sparsification) and scaling
+# ---------------------------------------------------------------------------
+
+def expand_mask(mask: jax.Array, group: int) -> jax.Array:
+    """(ng, N) uint32 bitmask -> (ng, G, N) {0,1} int32 per-element bits."""
+    shifts = jnp.arange(group, dtype=jnp.uint32)[None, :, None]
+    return ((mask[:, None, :] >> shifts) & 1).astype(jnp.int32)
+
+
+def decompress(ct: CompressedTensor, out_dtype=jnp.bfloat16) -> jax.Array:
+    """Full DECA pipeline: CompressedTensor -> dense (K, N) weights."""
+    spec = ct.spec
+    K, N = ct.shape
+    vals = dequant_codes(ct.codes, spec)  # (ng, k_cap, N)
+
+    if ct.scales is not None:
+        vals = vals * dequant_scales(ct.scales, spec)[:, None, :]
+
+    if ct.mask is None:
+        return vals.reshape(K, N).astype(out_dtype)
+
+    bits = expand_mask(ct.mask, spec.group)  # (ng, G, N)
+    # prefix-sum gives each set bit its slot in the packed nonzero array
+    prefix = jnp.cumsum(bits, axis=1) - bits
+    idx = jnp.clip(prefix, 0, spec.k_cap - 1)
+    gathered = jnp.take_along_axis(vals, idx, axis=1)  # (ng, G, N)
+    dense = jnp.where(bits == 1, gathered, 0.0)
+    return dense.reshape(K, N).astype(out_dtype)
+
+
+def decompress_gemm(
+    x: jax.Array, ct: CompressedTensor, out_dtype=jnp.float32
+) -> jax.Array:
+    """x (M, K) @ decompress(ct) (K, N) -> (M, N). Unfused reference."""
+    w = decompress(ct, out_dtype=jnp.bfloat16)
+    return jnp.dot(
+        x.astype(jnp.bfloat16), w, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def dense_roundtrip(w: np.ndarray, spec: CompressionSpec) -> np.ndarray:
+    """Numpy helper: what the dense weight looks like after compress->decompress
+    (i.e. the quantization+pruning error the *model* sees). Used by tests."""
+    from repro.core.compression import compress
+
+    ct = compress(w, spec)
+    return np.asarray(decompress(ct, out_dtype=jnp.float32))

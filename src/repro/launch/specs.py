@@ -1,0 +1,160 @@
+"""Abstract input specs (ShapeDtypeStruct) + shardings for every
+(architecture x shape x mesh) dry-run cell. No device allocation happens
+here — everything flows through jax.eval_shape.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.dist import sharding as sh
+from repro.models.model import Model
+from repro.train.trainer import build_optimizer
+
+FSDP_PARAM_THRESHOLD = 12e9  # params above this get 'data'-axis weight sharding
+
+
+def wants_fsdp(cfg: ModelConfig) -> bool:
+    return cfg.param_count() > FSDP_PARAM_THRESHOLD
+
+
+def abstract_params(model: Model):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: model.init(k), key)
+
+
+def abstract_compress_tree(aparams, spec):
+    """ShapeDtypeStruct analog of core.decompress.compress_tree: replaces
+    eligible FC weights with abstract CompressedTensors so compressed-serving
+    cells can be lowered without materializing 1T params."""
+    from repro.core.compression import CompressedTensor
+    from repro.core.decompress import _SKIP
+
+    def one(path, leaf):
+        name = "/".join(p.key if hasattr(p, "key") else str(p) for p in path)
+        shape = leaf.shape
+        if (
+            any(s in name for s in _SKIP)
+            or len(shape) < 2
+            or shape[-2] % spec.group
+            or int(np.prod(shape)) < 4096
+        ):
+            return leaf
+        lead, (k, n) = shape[:-2], shape[-2:]
+        ng = k // spec.group
+        ck = 2 * spec.k_cap if spec.quant == "bf16" else spec.k_cap * spec.bits // 8
+        codes = jax.ShapeDtypeStruct(lead + (ng, ck, n), jnp.uint8)
+        mask = (
+            jax.ShapeDtypeStruct(lead + (ng, n), jnp.uint32)
+            if spec.is_sparse else None
+        )
+        sdt = jnp.uint8 if spec.quant == "mxfp4" else jnp.uint16
+        scales = (
+            jax.ShapeDtypeStruct(lead + (ng, n), sdt) if spec.has_scale else None
+        )
+        return CompressedTensor(codes, mask, scales, spec, (k, n))
+
+    return jax.tree_util.tree_map_with_path(one, aparams)
+
+
+def abstract_opt_state(model: Model, aparams):
+    opt = build_optimizer(model.cfg)
+    return jax.eval_shape(opt.init, aparams)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one training/prefill batch (the data pipeline's
+    output signature)."""
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+    }
+    if cfg.frontend != "none":
+        out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.float32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.mrope_sections:
+        out["positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    return out
+
+
+def decode_specs(
+    model: Model, shape: ShapeConfig
+) -> Tuple[Any, Any, Any]:
+    """(tokens, positions, cache) specs for serve_step: one new token against
+    a seq_len-deep cache."""
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    if cfg.mrope_sections:
+        positions = jax.ShapeDtypeStruct((3, b, 1), jnp.int32)
+    else:
+        positions = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    cache = jax.eval_shape(
+        lambda: model.init_cache(b, s + 1)
+    )
+    return tokens, positions, cache
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeConfig, model: Optional[Model] = None
+) -> Dict[str, Any]:
+    """Public entry: all model inputs for the cell, as ShapeDtypeStructs."""
+    model = model or Model(cfg)
+    if shape.kind in ("train", "prefill"):
+        return {"batch": batch_specs(cfg, shape)}
+    tokens, positions, cache = decode_specs(model, shape)
+    return {"tokens": tokens, "positions": positions, "cache": cache}
+
+
+# ---------------------------------------------------------------------------
+# shardings per cell
+# ---------------------------------------------------------------------------
+
+def cell_shardings(
+    model: Model,
+    shape: ShapeConfig,
+    ctx: sh.ShardingCtx,
+    aparams: Any = None,
+) -> Dict[str, Any]:
+    """NamedSharding trees for params / opt_state / inputs of the cell."""
+    cfg = model.cfg
+    if aparams is None:
+        aparams = abstract_params(model)
+    stacked = model.uniform
+    mk = lambda spec_tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(ctx.mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+    out: Dict[str, Any] = {
+        "params": mk(sh.param_spec_tree(aparams, ctx, scan_stacked=stacked)),
+        "abstract_params": aparams,
+    }
+    if shape.kind == "train":
+        aopt = abstract_opt_state(model, aparams)
+        out["opt_state"] = mk(
+            sh.opt_spec_tree(aopt, aparams, ctx, scan_stacked=stacked)
+        )
+        out["abstract_opt_state"] = aopt
+        out["batch"] = mk(
+            sh.data_spec_tree(batch_specs(cfg, shape), ctx)
+        )
+    elif shape.kind == "prefill":
+        out["batch"] = mk(sh.data_spec_tree(batch_specs(cfg, shape), ctx))
+    else:  # decode
+        tokens, positions, cache = decode_specs(model, shape)
+        out["tokens"] = mk(sh.data_spec_tree({"tokens": tokens}, ctx))["tokens"]
+        out["positions"] = mk(
+            sh.data_spec_tree({"positions": positions}, ctx)
+        )["positions"]
+        out["cache"] = mk(
+            sh.data_spec_tree(cache, ctx, scan_stacked=stacked)
+        )
+    return out

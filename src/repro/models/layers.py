@@ -1,0 +1,646 @@
+"""Layer library: norms, rotary embeddings (incl. M-RoPE), GQA attention
+(global / local-window / softcapped, chunked for long context), dense and
+MoE FFNs, the RG-LRU recurrent block (Griffin), and the Mamba-1 block.
+
+Functional style: every layer is `f(params, x, ...) -> y` with `init_*`
+companions returning param pytrees. Activation sharding constraints are
+injected via `repro.dist.sharding.constrain` (identity outside a mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.decompress import mm
+from repro.dist.sharding import constrain, constrain_qkv
+
+Params = Dict[str, Any]
+
+
+def _dense_init(key, shape, scale_axis=0, dtype=jnp.float32):
+    fan_in = shape[scale_axis]
+    return (jax.random.normal(key, shape) / math.sqrt(fan_in)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(w: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Mixed-precision RMS norm: two big passes instead of ~six.
+
+    The sum of squares is f32-accumulated directly from the bf16 input
+    (einsum with preferred_element_type) so no f32 copy of x is ever
+    materialized; the per-row scale (f32, tiny) is applied in the input
+    dtype. §Perf hillclimb 1, iteration 2."""
+    d = x.shape[-1]
+    ssq = jnp.einsum(
+        "...d,...d->...", x, x, preferred_element_type=jnp.float32
+    )
+    scale = jax.lax.rsqrt(ssq / d + eps)[..., None]
+    return (x * scale.astype(x.dtype)) * (1.0 + w).astype(x.dtype)
+
+
+def init_rms_norm(d: int) -> jax.Array:
+    return jnp.zeros((d,), jnp.float32)  # gemma-style (1 + w) parameterization
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE and qwen2-vl M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head // 2, dtype=jnp.float32) * 2 / d_head))
+
+
+def apply_rope(
+    x: jax.Array,  # (B, S, H, Dh)
+    positions: jax.Array,  # (B, S) int32
+    theta: float,
+) -> jax.Array:
+    """RoPE with a shared trig table: positions are batch-shared (synthetic
+    pipeline), so cos/sin are computed once at (S, Dh/2) f32 and applied in
+    the input dtype — no (B, S, H, Dh) f32 materialization (§Perf
+    hillclimb 1, iteration 3)."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    angles = positions[0][:, None].astype(jnp.float32) * freqs  # (S, Dh/2)
+    cos = jnp.cos(angles)[None, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[None, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_mrope(
+    x: jax.Array,  # (B, S, H, Dh)
+    positions: jax.Array,  # (3, B, S) — temporal / height / width ids
+    theta: float,
+    sections: Tuple[int, ...],
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the rotary half-dim is split into sections,
+    each rotated by a different positional stream."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (Dh/2,)
+    # section id per frequency index
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=dh // 2
+    )
+    pos = positions.astype(jnp.float32)  # (3, B, S)
+    angles = jnp.take(pos, sec_id, axis=0)  # (Dh/2, B, S) via axis-0 gather
+    angles = jnp.moveaxis(angles, 0, -1) * freqs  # (B, S, Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(ks[0], (d, hq * dh), dtype=dtype),
+        "wk": _dense_init(ks[1], (d, hkv * dh), dtype=dtype),
+        "wv": _dense_init(ks[2], (d, hkv * dh), dtype=dtype),
+        "wo": _dense_init(ks[3], (hq * dh, d), dtype=dtype),
+    }
+
+
+def _attn_scores_mask(
+    q_pos: jax.Array,  # (Sq,) absolute positions of queries
+    k_pos: jax.Array,  # (Sk,)
+    causal: bool,
+    window: int,
+) -> jax.Array:
+    """(Sq, Sk) additive mask in f32."""
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), jnp.bool_)
+    if causal:
+        ok &= dk <= dq
+    if window > 0:
+        ok &= dk > dq - window
+    return jnp.where(ok, 0.0, -1e30)
+
+
+def _softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+def attention_core(
+    q: jax.Array,  # (B, Sq, Hq, Dh)
+    k: jax.Array,  # (B, Sk, Hkv, Dh)
+    v: jax.Array,  # (B, Sk, Hkv, Dh)
+    *,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    causal: bool,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_chunk: int = 1024,
+) -> jax.Array:
+    """Grouped-query attention, chunked over queries so peak memory is
+    O(q_chunk * Sk) rather than O(Sq * Sk). Mixed-precision: scores in f32."""
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, sq, hkv, group, dh)
+
+    def chunk_attn(qc, qp):  # qc: (B, Cq, Hkv, G, Dh)
+        scores = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qc.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32,
+        ) * scale
+        scores = _softcap(scores, softcap)
+        scores = scores + _attn_scores_mask(qp, k_pos, causal, window)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum(
+            "bhgqk,bkhd->bqhgd", probs, v, preferred_element_type=jnp.float32
+        )
+
+    if sq <= q_chunk:
+        out = chunk_attn(qg, q_pos)
+    else:
+        n_chunks = math.ceil(sq / q_chunk)
+        pad = n_chunks * q_chunk - sq
+        qg_p = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        qp_p = jnp.pad(q_pos, (0, pad))
+        qg_c = qg_p.reshape(b, n_chunks, q_chunk, hkv, group, dh)
+        qp_c = qp_p.reshape(n_chunks, q_chunk)
+        out = jax.lax.map(
+            lambda args: chunk_attn(args[0], args[1]),
+            (jnp.moveaxis(qg_c, 1, 0), qp_c),
+        )  # (n_chunks, B, Cq, Hkv, G, Dh)
+        out = jnp.moveaxis(out, 0, 1).reshape(b, n_chunks * q_chunk, hkv, group, dh)
+        out = out[:, :sq]
+    return out.reshape(b, sq, hq, dh).astype(q.dtype)
+
+
+CACHE_EMPTY_POS = 1 << 30  # sentinel: empty cache slots masked via huge position
+
+
+def quantize_bf8_jnp(x: jax.Array) -> jax.Array:
+    """bf16/f32 -> E5M2 code (uint8), RNE — the DECA BF8 substrate applied
+    to the KV cache (beyond-paper: halves KV bytes; decode dequantizes on
+    read with the same ALU decode the weight kernel uses)."""
+    h = jax.lax.bitcast_convert_type(
+        x.astype(jnp.float16), jnp.uint16
+    ).astype(jnp.uint32)
+    lower, upper = h & 0xFF, h >> 8
+    round_up = ((lower > 0x80) | ((lower == 0x80) & (upper & 1 == 1))).astype(
+        jnp.uint32
+    )
+    code = upper + round_up
+    overflow = (code & 0x7F) == 0x7C  # finite -> inf: keep truncated value
+    code = jnp.where(overflow & ((upper & 0x7F) < 0x7C), upper, code)
+    return code.astype(jnp.uint8)
+
+
+def dequantize_bf8_jnp(code: jax.Array) -> jax.Array:
+    bits = code.astype(jnp.uint16) << 8
+    return jax.lax.bitcast_convert_type(bits, jnp.float16).astype(jnp.bfloat16)
+
+
+def init_kv_cache(
+    b: int, size: int, hkv: int, dh: int, dtype=jnp.bfloat16, quant: str = "none"
+) -> Dict[str, jax.Array]:
+    size = (size + 31) // 32 * 32  # seq shardable over any mesh axis
+    kv_dtype = jnp.uint8 if quant == "bf8" else dtype
+    return {
+        "k": jnp.zeros((b, size, hkv, dh), kv_dtype),
+        "v": jnp.zeros((b, size, hkv, dh), kv_dtype),
+        "pos": jnp.full((size,), CACHE_EMPTY_POS, jnp.int32),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def update_cache(
+    cache: Dict[str, jax.Array], k: jax.Array, v: jax.Array, pos: jax.Array
+) -> Dict[str, jax.Array]:
+    """Append s tokens. Ring semantics: masking is position-based, so slot
+    order in the buffer is irrelevant (local-window caches wrap). Quantized
+    (bf8) caches encode on write."""
+    if cache["k"].dtype == jnp.uint8:
+        k, v = quantize_bf8_jnp(k), quantize_bf8_jnp(v)
+    size = cache["k"].shape[1]
+    s = k.shape[1]
+    length = cache["length"]
+    if s >= size:  # static: prefill longer than the (windowed) cache
+        ck, cv, cp = k[:, -size:], v[:, -size:], pos[-size:].astype(jnp.int32)
+    else:
+        idx = length % size
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, axis=1)
+        cp = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], pos.astype(jnp.int32), idx, axis=0
+        )
+    return {"k": ck, "v": cv, "pos": cp, "length": length + s}
+
+
+def attention_block(
+    params: Params,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,          # (B, S) or (3, B, S) for M-RoPE
+    local: bool,
+    cache: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full attention layer: proj -> rope -> (cache update) -> attn -> out."""
+    b, s, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = mm(x, params["wq"]).reshape(b, s, hq, dh)
+    k = mm(x, params["wk"]).reshape(b, s, hkv, dh)
+    v = mm(x, params["wv"]).reshape(b, s, hkv, dh)
+    q, k, v = constrain_qkv(q, k, v)
+
+    if cfg.mrope_sections:
+        mpos = positions if positions.ndim == 3 else jnp.broadcast_to(
+            positions, (3,) + positions.shape
+        )
+        tok_pos = mpos[0]  # temporal stream carries token order
+        q = apply_mrope(q, mpos, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, mpos, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.pos_emb == "rope":
+        tok_pos = positions
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        tok_pos = positions if positions.ndim == 2 else positions[0]
+
+    window = cfg.window if local else 0
+    q_pos = tok_pos[0]  # positions shared across the batch (synthetic pipeline)
+    if cache is not None:
+        new_cache = update_cache(cache, k, v, q_pos)
+        k_all, v_all = new_cache["k"], new_cache["v"]
+        if k_all.dtype == jnp.uint8:  # DECA-style dequantize-on-read
+            k_all, v_all = dequantize_bf8_jnp(k_all), dequantize_bf8_jnp(v_all)
+        out = attention_core(
+            q, k_all, v_all,
+            q_pos=q_pos, k_pos=new_cache["pos"],
+            causal=cfg.causal, window=window, softcap=cfg.attn_softcap,
+        )
+    else:
+        new_cache = None
+        out = attention_core(
+            q, k, v,
+            q_pos=q_pos, k_pos=q_pos,
+            causal=cfg.causal, window=window, softcap=cfg.attn_softcap,
+        )
+    out = constrain(out, "bshd")
+    return mm(out.reshape(b, s, hq * dh), params["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFNs: dense and MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        return {
+            "w_gate": _dense_init(ks[0], (d, f), dtype=dtype),
+            "w_up": _dense_init(ks[1], (d, f), dtype=dtype),
+            "w_down": _dense_init(ks[2], (f, d), dtype=dtype),
+        }
+    return {
+        "w_up": _dense_init(ks[0], (d, f), dtype=dtype),
+        "w_down": _dense_init(ks[1], (f, d), dtype=dtype),
+    }
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name in ("swiglu",):
+        return jax.nn.silu(x)
+    if name in ("geglu", "gelu"):
+        return jax.nn.gelu(x)
+    return jax.nn.relu(x)
+
+
+def mlp_block(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        h = _act(cfg.mlp_act, mm(x, params["w_gate"])) * mm(x, params["w_up"])
+    else:
+        h = _act(cfg.mlp_act, mm(x, params["w_up"]))
+    h = constrain(h, "bsf")
+    return mm(h, params["w_down"])
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": _dense_init(ks[0], (d, e), dtype=jnp.float32),
+        "w_up": _dense_init(ks[1], (e, d, f), scale_axis=1, dtype=dtype),
+        "w_down": _dense_init(ks[2], (e, f, d), scale_axis=1, dtype=dtype),
+    }
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        p["w_gate"] = _dense_init(ks[3], (e, d, f), scale_axis=1, dtype=dtype)
+    return p
+
+
+def _dispatch_groups(t: int) -> int:
+    """Number of group-local dispatch shards = the active mesh's batch
+    sharding (pod*data), so sorts/capacity stay shard-local (no cross-shard
+    communication for routing; the expert transpose is the one EP all-to-all).
+    Falls back to 1 outside a mesh or when t is too small."""
+    from repro.dist.sharding import active_ctx
+
+    ctx = active_ctx()
+    if ctx is None:
+        return 1
+    sizes = ctx.axis_sizes
+    g = sizes.get("pod", 1) * sizes.get("data", 1)
+    while g > 1 and t % g:
+        g //= 2
+    return max(1, g)
+
+
+def moe_block(
+    params: Params, x: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Top-k token-choice MoE with group-local capacity dispatch.
+
+    Tokens are split into G dispatch groups matching the data sharding; each
+    group top-k routes, sorts, and packs into (E, cap_local) capacity bins
+    *locally* (vmapped sort => no inter-shard communication). The grouped
+    buffer (G, E, cap, D) is then transposed to (E, G*cap, D) — with E
+    expert-sharded this transpose is the canonical EP all-to-all. Routing
+    slots are processed sequentially (scan over k) to bound peak memory at
+    kimi-k2 scale. Returns (output, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    t = b * s
+    g = _dispatch_groups(t)
+    tl = t // g  # tokens per dispatch group
+    xf = x.reshape(g, tl, d)
+
+    logits = jnp.einsum(
+        "gtd,de->gte", xf.astype(jnp.float32), params["router"]
+    )  # (G, Tl, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (G, Tl, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style), computed globally
+    me = probs.mean(axis=(0, 1))  # (E,)
+    ce = jnp.zeros((e,)).at[expert_idx.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    # capacity floor of 4 keeps tiny decode batches drop-free
+    cap = max(4, int(math.ceil(tl / e * cfg.capacity_factor)))
+    gi = jnp.arange(g)[:, None]  # group index for batched scatters
+
+    def one_slot(carry, slot):
+        out = carry
+        eid = expert_idx[:, :, slot]            # (G, Tl)
+        gates = gate_vals[:, :, slot]           # (G, Tl)
+        order = jnp.argsort(eid, axis=1)        # local per-group sort
+        sorted_eid = jnp.take_along_axis(eid, order, axis=1)
+        seg_start = jax.vmap(
+            lambda se: jnp.searchsorted(se, se, side="left")
+        )(sorted_eid)
+        pos = jnp.arange(tl)[None, :] - seg_start  # rank within expert bin
+        keep = pos < cap
+        dest = jnp.where(keep, sorted_eid * cap + pos, e * cap)  # drop->pad row
+        # vmapped per-group gather/scatter: keeps index operands at (Tl,)
+        # per group (take_along_axis would broadcast u32 indices to
+        # (G, Tl, D) — tens of GB — and GSPMD replicates them)
+        x_sorted = jax.vmap(lambda xrow, o: xrow[o])(xf, order)
+        xg = jax.vmap(
+            lambda dst, xs: jnp.zeros((e * cap + 1, d), x.dtype).at[dst].set(xs)
+        )(dest, x_sorted)
+        xg = xg[:, :-1].reshape(g, e, cap, d)
+        # (G, E, cap, D) -> (E, G, cap, D): the EP all-to-all when E is
+        # sharded. Kept 4D through the expert einsums — flattening (G, cap)
+        # would merge a sharded with an unsharded dim and force GSPMD into
+        # full rematerialization.
+        xe = jnp.swapaxes(xg, 0, 1)
+        xe = constrain(xe, "egcd")
+        from repro.core.compression import CompressedTensor
+
+        if isinstance(params["w_up"], CompressedTensor):
+            # compressed serving: per-expert DECA decompress-GeMM
+            def expert_ffn(xi, eidx):
+                pick = lambda ct: jax.tree.map(lambda a: a[eidx], ct)
+                up = mm(xi, pick(params["w_up"]))
+                if "w_gate" in params:
+                    hi = _act(cfg.mlp_act, mm(xi, pick(params["w_gate"]))) * up
+                else:
+                    hi = _act(cfg.mlp_act, up)
+                return mm(hi, pick(params["w_down"]))
+
+            ye = jnp.stack([expert_ffn(xe[i], i) for i in range(e)])
+        else:
+            # explicit ZeRO: all-gather the FSDP ('data') shard of each expert
+            # weight at point of use (no data-axis conflict inside the einsum).
+            # Train-only: at decode the weights stay contraction-sharded and
+            # the (tiny) outputs are all-reduced instead (§Perf hillclimb 2).
+            from repro.dist.sharding import active_ctx
+
+            ctx = active_ctx()
+            gather = ctx is not None and ctx.mode == "train"
+            wuse = lambda w, kind: constrain(w, kind) if gather else w
+            w_up = wuse(params["w_up"], "edf_use")
+            w_down = wuse(params["w_down"], "efd_use")
+            if "w_gate" in params:
+                w_gate = wuse(params["w_gate"], "edf_use")
+                h = _act(
+                    cfg.mlp_act, jnp.einsum("egcd,edf->egcf", xe, w_gate)
+                ) * jnp.einsum("egcd,edf->egcf", xe, w_up)
+            else:
+                h = _act(cfg.mlp_act, jnp.einsum("egcd,edf->egcf", xe, w_up))
+            h = constrain(h, "egcf")
+            ye = jnp.einsum("egcf,efd->egcd", h, w_down)
+        yg = jnp.swapaxes(ye, 0, 1)  # A2A back: (G, E, cap, D)
+        yflat = yg.reshape(g, e * cap, d)
+        yflat = jnp.concatenate(
+            [yflat, jnp.zeros((g, 1, d), yflat.dtype)], axis=1
+        )
+        y_tok = jax.vmap(lambda yrow, dst: yrow[dst])(yflat, dest)
+        gathered_gates = jnp.take_along_axis(gates, order, axis=1)
+        weighted = (y_tok * (gathered_gates * keep)[:, :, None]).astype(x.dtype)
+        contrib = jax.vmap(
+            lambda o, w: jnp.zeros((tl, d), x.dtype).at[o].set(w)
+        )(order, weighted)
+        return out + contrib, None
+
+    out0 = jnp.zeros((g, tl, d), x.dtype)
+    out, _ = jax.lax.scan(one_slot, out0, jnp.arange(k))
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin / recurrentgemma)
+# ---------------------------------------------------------------------------
+
+def init_rglru(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d, r = cfg.d_model, cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": _dense_init(ks[0], (d, r), dtype=dtype),
+        "w_gate_branch": _dense_init(ks[1], (d, r), dtype=dtype),
+        "conv_w": _dense_init(ks[2], (cfg.ssm_conv, r), dtype=jnp.float32),
+        "w_a": _dense_init(ks[3], (r, r), dtype=dtype),
+        "w_x": _dense_init(ks[4], (r, r), dtype=dtype),
+        "b_a": jnp.zeros((r,), jnp.float32),
+        "b_x": jnp.zeros((r,), jnp.float32),
+        # c=8 in Griffin; a = sigmoid(lambda) stable init around 0.9-0.999
+        "a_param": jnp.log(jnp.expm1(jnp.linspace(0.9, 0.999, r) ** (1 / 8.0))),
+        "w_out": _dense_init(ks[5], (r, d), dtype=dtype),
+    }
+
+
+def rglru_scan(
+    params: Params,
+    u: jax.Array,  # (B, S, R) conv output
+    h0: jax.Array,  # (B, R)
+) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)."""
+    c = 8.0
+    log_a_base = -c * jax.nn.softplus(params["a_param"])  # (R,) negative
+    r_gate = jax.nn.sigmoid(
+        u.astype(jnp.float32) @ params["w_a"].astype(jnp.float32) + params["b_a"]
+    )
+    i_gate = jax.nn.sigmoid(
+        u.astype(jnp.float32) @ params["w_x"].astype(jnp.float32) + params["b_x"]
+    )
+    log_a = r_gate * log_a_base  # (B, S, R)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i_gate * u.astype(jnp.float32))
+
+    def step(h, inp):
+        a_t, g_t = inp
+        h = a_t * h + g_t
+        return h, h
+
+    hT, hs = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (jnp.moveaxis(a, 1, 0), jnp.moveaxis(gated, 1, 0)),
+    )
+    return jnp.moveaxis(hs, 0, 1).astype(u.dtype), hT
+
+
+def rglru_block(
+    params: Params,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    b, s, _ = x.shape
+    r = cfg.lru_width or cfg.d_model
+    gate = jax.nn.gelu(mm(x, params["w_gate_branch"]))  # (B, S, R)
+    u = mm(x, params["w_in"])  # (B, S, R)
+
+    # short conv1d along time (depthwise)
+    ck = cfg.ssm_conv
+    if state is not None:
+        conv_buf = state["conv"]  # (B, ck-1, R)
+        u_ext = jnp.concatenate([conv_buf.astype(u.dtype), u], axis=1)
+        new_conv = u_ext[:, -(ck - 1):, :]
+    else:
+        u_ext = jnp.pad(u, ((0, 0), (ck - 1, 0), (0, 0)))
+        new_conv = u_ext[:, -(ck - 1):, :]
+    # depthwise causal conv as ck shifted adds (no (B,S,ck,R) blow-up)
+    u = sum(
+        u_ext[:, i : i + s, :].astype(jnp.float32) * params["conv_w"][i]
+        for i in range(ck)
+    ).astype(x.dtype)
+
+    h0 = state["h"] if state is not None else jnp.zeros((b, r), jnp.float32)
+    hs, hT = rglru_scan(params, u, h0)
+    out = mm(hs * gate, params["w_out"])
+    new_state = {"conv": new_conv, "h": hT} if state is not None else None
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 block (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d, di, st, dr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    a_init = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * di), dtype=dtype),
+        "conv_w": _dense_init(ks[1], (cfg.ssm_conv, di), dtype=jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": _dense_init(ks[2], (di, dr + 2 * st), dtype=dtype),
+        "dt_proj": _dense_init(ks[3], (dr, di), dtype=dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01))),  # softplus^-1(0.01)
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[4], (di, d), dtype=dtype),
+    }
+
+
+def mamba_block(
+    params: Params,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Selective SSM: h_t = exp(dt*A) h_{t-1} + dt*B_t x_t ; y = C_t h + D x."""
+    b, s, _ = x.shape
+    di, st, dr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = mm(x, params["in_proj"])  # (B, S, 2*di)
+    u, z = jnp.split(xz, 2, axis=-1)
+
+    # depthwise causal conv
+    ck = cfg.ssm_conv
+    if state is not None:
+        conv_buf = state["conv"]
+        u_ext = jnp.concatenate([conv_buf.astype(u.dtype), u], axis=1)
+        new_conv = u_ext[:, -(ck - 1):, :]
+    else:
+        u_ext = jnp.pad(u, ((0, 0), (ck - 1, 0), (0, 0)))
+        new_conv = u_ext[:, -(ck - 1):, :]
+    u = jax.nn.silu(
+        sum(
+            u_ext[:, i : i + s, :].astype(jnp.float32) * params["conv_w"][i]
+            for i in range(ck)
+        )
+        + params["conv_b"]
+    ).astype(x.dtype)
+
+    # input-dependent SSM parameters
+    proj = mm(u, params["x_proj"])  # (B, S, dr + 2*st)
+    dt_r, b_mat, c_mat = jnp.split(proj, [dr, dr + st], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_r @ params["dt_proj"]).astype(jnp.float32) + params["dt_bias"]
+    )  # (B, S, di)
+    a = -jnp.exp(params["a_log"])  # (di, st)
+    da = jnp.exp(dt[..., None] * a)  # (B, S, di, st)
+    db = dt[..., None] * b_mat[:, :, None, :].astype(jnp.float32)  # (B, S, di, st)
+    dbu = db * u[..., None].astype(jnp.float32)
+
+    h0 = (
+        state["h"]
+        if state is not None
+        else jnp.zeros((b, di, st), jnp.float32)
+    )
+
+    def step(h, inp):
+        da_t, dbu_t = inp
+        h = da_t * h + dbu_t
+        return h, h
+
+    hT, hs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(da, 1, 0), jnp.moveaxis(dbu, 1, 0))
+    )  # hs: (S, B, di, st)
+    y = jnp.einsum("sbin,bsn->bsi", hs, c_mat.astype(jnp.float32))
+    y = (y + params["d_skip"] * u.astype(jnp.float32)).astype(x.dtype)
+    out = mm(y * jax.nn.silu(z), params["out_proj"])
+    new_state = {"conv": new_conv, "h": hT} if state is not None else None
+    return out, new_state

@@ -1,0 +1,283 @@
+"""Config-driven model assembly.
+
+One `Model` class covers all assigned families:
+  dense/vlm/audio : [attn + FFN] x L          (global / local_global)
+  moe             : [attn + MoE-FFN] x L
+  ssm             : [mamba] x L               (no separate FFN)
+  hybrid          : pattern of [rec|attn + FFN] blocks (Griffin 2:1)
+
+Homogeneous stacks are scanned (`lax.scan` over stacked layer params) so the
+HLO stays compact at 64+ layers; heterogeneous patterns (gemma2,
+recurrentgemma) are unrolled. Both paths share the same block function.
+
+The paper's technique plugs in at serving time: `compress_params` converts
+every FC weight into a `CompressedTensor` and `forward` routes matmuls
+through `repro.kernels.ops.decompress_gemm` (see serve/engine.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def _kind_layout(cfg: ModelConfig) -> Tuple[str, ...]:
+    return cfg.layer_kinds()
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.kinds = _kind_layout(cfg)
+        self.uniform = len(set(self.kinds)) == 1 and cfg.scan_layers
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def _init_block(self, key, kind: str, dtype) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        p: Params = {"pre_norm": L.init_rms_norm(cfg.d_model)}
+        if kind in ("attn", "attn_local"):
+            p["attn"] = L.init_attention(ks[0], cfg, dtype)
+            if cfg.post_norms:
+                p["post_attn_norm"] = L.init_rms_norm(cfg.d_model)
+        elif kind == "ssm":
+            p["mamba"] = L.init_mamba(ks[0], cfg, dtype)
+        elif kind == "rec":
+            p["rec"] = L.init_rglru(ks[0], cfg, dtype)
+        if cfg.d_ff and kind != "ssm":
+            p["pre_mlp_norm"] = L.init_rms_norm(cfg.d_model)
+            if cfg.n_experts:
+                p["moe"] = L.init_moe(ks[1], cfg, dtype)
+            else:
+                p["mlp"] = L.init_mlp(ks[1], cfg, dtype)
+            if cfg.post_norms:
+                p["post_mlp_norm"] = L.init_rms_norm(cfg.d_model)
+        return p
+
+    def init(self, key: jax.Array, dtype=jnp.bfloat16) -> Params:
+        cfg = self.cfg
+        k_emb, k_blocks, k_head, k_pos = jax.random.split(key, 4)
+        params: Params = {
+            "embed": (
+                jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model)) * 0.02
+            ).astype(dtype),
+            "final_norm": L.init_rms_norm(cfg.d_model),
+        }
+        if cfg.pos_emb == "learned":
+            params["pos_embed"] = (
+                jax.random.normal(k_pos, (cfg.pos_table, cfg.d_model)) * 0.02
+            ).astype(dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (
+                jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size))
+                / math.sqrt(cfg.d_model)
+            ).astype(dtype)
+        bkeys = jax.random.split(k_blocks, cfg.n_layers)
+        blocks = [
+            self._init_block(bkeys[i], self.kinds[i], dtype)
+            for i in range(cfg.n_layers)
+        ]
+        if self.uniform:
+            params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+        else:
+            params["layers"] = {str(i): b for i, b in enumerate(blocks)}
+        return params
+
+    # ------------------------------------------------------------------
+    # cache
+    # ------------------------------------------------------------------
+    def _block_cache(self, kind: str, b: int, max_len: int, dtype) -> Params:
+        cfg = self.cfg
+        if kind == "attn":
+            return L.init_kv_cache(
+                b, max_len, cfg.n_kv_heads, cfg.d_head, dtype, quant=cfg.kv_quant
+            )
+        if kind == "attn_local":
+            return L.init_kv_cache(
+                b, min(max_len, cfg.window), cfg.n_kv_heads, cfg.d_head, dtype,
+                quant=cfg.kv_quant,
+            )
+        if kind == "ssm":
+            return {
+                "conv": jnp.zeros((b, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+                "h": jnp.zeros((b, cfg.d_inner, cfg.ssm_state), jnp.float32),
+            }
+        if kind == "rec":
+            r = cfg.lru_width or cfg.d_model
+            return {
+                "conv": jnp.zeros((b, cfg.ssm_conv - 1, r), dtype),
+                "h": jnp.zeros((b, r), jnp.float32),
+            }
+        raise ValueError(kind)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> Any:
+        caches = [
+            self._block_cache(k, batch, max_len, dtype) for k in self.kinds
+        ]
+        if self.uniform:
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+        return {str(i): c for i, c in enumerate(caches)}
+
+    # ------------------------------------------------------------------
+    # forward
+    # ------------------------------------------------------------------
+    def _block_apply(
+        self, p: Params, x: jax.Array, kind: str, positions, cache
+    ) -> Tuple[jax.Array, Any, jax.Array]:
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        h = L.rms_norm(p["pre_norm"], x, cfg.norm_eps)
+        if kind in ("attn", "attn_local"):
+            out, new_cache = L.attention_block(
+                p["attn"], h, cfg, positions=positions,
+                local=(kind == "attn_local"), cache=cache,
+            )
+            if cfg.post_norms:
+                out = L.rms_norm(p["post_attn_norm"], out, cfg.norm_eps)
+        elif kind == "ssm":
+            out, new_cache = L.mamba_block(p["mamba"], h, cfg, state=cache)
+        elif kind == "rec":
+            out, new_cache = L.rglru_block(p["rec"], h, cfg, state=cache)
+        else:  # pragma: no cover
+            raise ValueError(kind)
+        x = x + out
+        if cfg.d_ff and kind != "ssm":
+            h = L.rms_norm(p["pre_mlp_norm"], x, cfg.norm_eps)
+            if cfg.n_experts:
+                out, aux = L.moe_block(p["moe"], h, cfg)
+            else:
+                out = L.mlp_block(p["mlp"], h, cfg)
+            if cfg.post_norms:
+                out = L.rms_norm(p["post_mlp_norm"], out, cfg.norm_eps)
+            x = x + out
+        x = constrain(x, "bsd")
+        return x, new_cache, aux
+
+    def forward(
+        self,
+        params: Params,
+        *,
+        tokens: Optional[jax.Array] = None,     # (B, S) int32
+        embeds: Optional[jax.Array] = None,     # (B, S, D) frontend stub
+        positions: Optional[jax.Array] = None,  # (B, S) or (3, B, S)
+        cache: Optional[Any] = None,
+        remat: bool = False,
+    ) -> Tuple[jax.Array, Any, jax.Array]:
+        """Returns (logits (B, S, V), new_cache, moe_aux_loss)."""
+        cfg = self.cfg
+        if embeds is None:
+            x = jnp.take(params["embed"], tokens, axis=0)
+        else:
+            x = embeds
+        b, s, _ = x.shape
+        if cfg.embed_scale:
+            x = x * math.sqrt(cfg.d_model)
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        if cfg.pos_emb == "learned":
+            tok_pos = positions if positions.ndim == 2 else positions[0]
+            idx = jnp.clip(tok_pos, 0, cfg.pos_table - 1)
+            x = x + jnp.take(params["pos_embed"], idx, axis=0)
+        x = constrain(x.astype(jnp.bfloat16), "bsd")
+
+        block = self._block_apply
+        if remat:
+            block = jax.checkpoint(
+                block, static_argnums=(2,), prevent_cse=False
+            )
+
+        if self.uniform:
+            kind = self.kinds[0]
+
+            def body(carry, per_layer):
+                xc, aux_acc = carry
+                if cache is None:
+                    p_l, cache_l = per_layer, None
+                else:
+                    p_l, cache_l = per_layer
+                xc, new_cache_l, aux_l = block(p_l, xc, kind, positions, cache_l)
+                return (xc, aux_acc + aux_l), new_cache_l
+
+            xs = params["blocks"] if cache is None else (params["blocks"], cache)
+            (x, aux), new_cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+            if cache is None:
+                new_cache = None
+        else:
+            aux = jnp.zeros((), jnp.float32)
+            new_cache = {} if cache is not None else None
+            for i, kind in enumerate(self.kinds):
+                cache_l = cache[str(i)] if cache is not None else None
+                x, nc, aux_l = block(
+                    params["layers"][str(i)], x, kind, positions, cache_l
+                )
+                aux = aux + aux_l
+                if cache is not None:
+                    new_cache[str(i)] = nc
+
+        x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = jnp.einsum(
+                "bsd,vd->bsv", x, params["embed"], preferred_element_type=jnp.float32
+            )
+        else:
+            from repro.core.decompress import mm
+
+            logits = mm(x.astype(jnp.float32), params["lm_head"])
+        if cfg.final_softcap:
+            logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+        logits = constrain(logits, "btv")
+        return logits, new_cache, aux
+
+    # ------------------------------------------------------------------
+    # losses and steps
+    # ------------------------------------------------------------------
+    def loss(
+        self,
+        params: Params,
+        batch: Dict[str, jax.Array],
+        *,
+        remat: bool = True,
+        aux_weight: float = 0.01,
+        z_weight: float = 1e-4,
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits, _, aux = self.forward(
+            params,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            positions=batch.get("positions"),
+            remat=remat,
+        )
+        labels = batch["labels"]
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0] - logz
+        mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+        denom = jnp.maximum(mask.sum(), 1.0)
+        ce = -(ll * mask).sum() / denom
+        zl = ((logz * mask) ** 2).sum() / denom
+        total = ce + aux_weight * aux + z_weight * zl
+        return total, {"ce": ce, "aux": aux, "z_loss": zl}
+
+    def decode_step(
+        self,
+        params: Params,
+        tokens: jax.Array,      # (B, 1)
+        positions: jax.Array,   # (B, 1) or (3, B, 1)
+        cache: Any,
+    ) -> Tuple[jax.Array, Any]:
+        """One next-token step against a filled cache. Returns (logits(B,V), cache)."""
+        logits, new_cache, _ = self.forward(
+            params, tokens=tokens, positions=positions, cache=cache
+        )
+        return logits[:, -1, :], new_cache

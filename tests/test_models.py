@@ -1,0 +1,161 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config,
+one forward + one train step on CPU, asserting shapes and finiteness; plus
+decode-vs-forward consistency — the serving path must reproduce the training
+forward exactly (KV caches, SSM states, ring buffers, MoE routing)."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ARCH_IDS, SHAPES, ShapeConfig, get_config, get_smoke_config,
+    shape_applicability,
+)
+from repro.data.pipeline import SyntheticPipeline
+from repro.models.model import Model
+from repro.train.trainer import build_optimizer, make_train_step
+
+ASSIGNED = ARCH_IDS[:10]
+
+
+def _batch(cfg, b=2, s=16, seed=0):
+    shape = ShapeConfig("t", "train", s, b)
+    return {
+        k: jnp.asarray(v)
+        for k, v in SyntheticPipeline(cfg, shape, seed=seed).batch(0).items()
+    }
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_smoke(arch):
+    cfg = get_smoke_config(arch)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, _, aux = m.forward(
+        params,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        positions=batch.get("positions"),
+    )
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    if cfg.n_experts:
+        assert float(aux) > 0.0  # load-balancing loss is live
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_train_step_smoke(arch):
+    cfg = get_smoke_config(arch)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    opt = build_optimizer(cfg)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(m, opt))
+    batch = _batch(cfg)
+    new_params, _, metrics = step(params, opt_state, batch, 0)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually moved
+    delta = jax.tree_util.tree_reduce(
+        lambda a, l: a + float(jnp.abs(l[0].astype(jnp.float32)
+                                       - l[1].astype(jnp.float32)).sum()),
+        jax.tree.map(lambda a, b: (a, b), new_params, params),
+        0.0,
+    )
+    assert delta > 0.0
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if get_smoke_config(a).causal
+                                  and get_smoke_config(a).frontend == "none"])
+def test_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    full_logits, _, _ = m.forward(params, tokens=tokens)
+    cache = m.init_cache(B, S + 4)
+    _, cache, _ = m.forward(params, tokens=tokens[:, : S - 1], cache=cache)
+    step_logits, _ = m.decode_step(
+        params, tokens[:, S - 1 : S], jnp.full((B, 1), S - 1, jnp.int32), cache
+    )
+    np.testing.assert_allclose(
+        np.asarray(full_logits[:, -1, :], np.float32),
+        np.asarray(step_logits, np.float32),
+        atol=1e-3,
+    )
+
+
+def test_local_window_ring_cache_matches_forward():
+    """Decoding past the window must agree with a full forward (ring wrap)."""
+    cfg = get_smoke_config("gemma2-2b")  # window=32
+    cfg = dataclasses.replace(cfg, window=8)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 1, 24  # 3x the window
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+    full_logits, _, _ = m.forward(params, tokens=tokens)
+    cache = m.init_cache(B, S)
+    _, cache, _ = m.forward(params, tokens=tokens[:, :1], cache=cache)
+    for t in range(1, S):
+        step_logits, cache = m.decode_step(
+            params, tokens[:, t : t + 1], jnp.full((B, 1), t, jnp.int32), cache
+        )
+    np.testing.assert_allclose(
+        np.asarray(full_logits[:, -1, :], np.float32),
+        np.asarray(step_logits, np.float32),
+        atol=2e-3,
+    )
+
+
+def test_mamba_state_streaming_matches_forward():
+    """Token-by-token SSM decode == full-sequence scan."""
+    cfg = get_smoke_config("falcon-mamba-7b")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 10
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab_size)
+    full_logits, _, _ = m.forward(params, tokens=tokens)
+    cache = m.init_cache(B, S)
+    logits = None
+    for t in range(S):
+        logits, cache = m.decode_step(
+            params, tokens[:, t : t + 1], jnp.full((B, 1), t, jnp.int32), cache
+        )
+    np.testing.assert_allclose(
+        np.asarray(full_logits[:, -1, :], np.float32),
+        np.asarray(logits, np.float32),
+        atol=2e-3,
+    )
+
+
+def test_shape_applicability_rules():
+    # encoder: no decode cells; full-attention: no long_500k
+    hubert = get_config("hubert-xlarge")
+    assert shape_applicability(hubert, SHAPES["decode_32k"])
+    assert shape_applicability(hubert, SHAPES["long_500k"])
+    assert shape_applicability(hubert, SHAPES["train_4k"]) is None
+    llama = get_config("llama3-8b")
+    assert shape_applicability(llama, SHAPES["long_500k"])
+    assert shape_applicability(llama, SHAPES["decode_32k"]) is None
+    mamba = get_config("falcon-mamba-7b")
+    assert shape_applicability(mamba, SHAPES["long_500k"]) is None
+    rg = get_config("recurrentgemma-9b")
+    assert shape_applicability(rg, SHAPES["long_500k"]) is None
+
+
+def test_param_counts_match_published_sizes():
+    expected = {
+        "grok-1-314b": 314e9, "kimi-k2-1t-a32b": 1000e9, "gemma2-2b": 2.6e9,
+        "granite-3-8b": 8.1e9, "llama3-8b": 8.0e9, "llama3.2-1b": 1.24e9,
+        "qwen2-vl-7b": 7.6e9, "recurrentgemma-9b": 9.0e9,
+        "falcon-mamba-7b": 7.3e9, "hubert-xlarge": 1.0e9,
+    }
+    for arch, want in expected.items():
+        got = get_config(arch).param_count()
+        assert 0.8 * want <= got <= 1.25 * want, (arch, got, want)
+    # MoE active params
+    assert 25e9 <= get_config("kimi-k2-1t-a32b").active_param_count() <= 40e9

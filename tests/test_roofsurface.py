@@ -1,0 +1,124 @@
+"""Roof-Surface model tests: internal consistency + reproduction of the
+paper's published observations (the repro=5 validation gate)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dse, roofsurface as rs
+from repro.core.formats import CompressionSpec, PAPER_SCHEMES, get_spec
+
+
+def test_surface_is_min_of_rates():
+    s = get_spec("bf8_50")
+    pt = rs.evaluate(s, rs.SPR_HBM)
+    assert math.isclose(pt.tps, min(pt.rates.values()), rel_tol=1e-9)
+    assert pt.flops == 512 * 4 * pt.tps  # batch_n = 4 default
+
+
+@given(
+    st.sampled_from([s.name for s in PAPER_SCHEMES]),
+    st.floats(min_value=0.1, max_value=10.0),
+)
+@settings(max_examples=50, deadline=None)
+def test_monotone_in_vector_throughput(name, mult):
+    """More VOS can never hurt (the surface is monotone per axis)."""
+    s = get_spec(name)
+    base = rs.evaluate(s, rs.SPR_HBM)
+    scaled = rs.evaluate(s, rs.SPR_HBM.scaled(vos_mult=mult))
+    if mult >= 1.0:
+        assert scaled.tps >= base.tps - 1e-9
+    else:
+        assert scaled.tps <= base.tps + 1e-9
+
+
+def test_roofline_never_below_roofsurface():
+    """The 2D roofline ('Optimal') upper-bounds the Roof-Surface prediction
+    (it ignores the VEC term)."""
+    for s in PAPER_SCHEMES:
+        rl = rs.roofline_flops(s, rs.SPR_HBM)
+        pt = rs.evaluate(s, rs.SPR_HBM)
+        assert rl >= pt.flops - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# paper-claim reproduction (§3, §4, §9.2 of the paper)
+# ---------------------------------------------------------------------------
+
+def test_paper_bf8_5_divergence_on_hbm():
+    """Paper Fig. 3b: Optimal/Observed = 4.94x for BF8_5% on HBM (we accept
+    4.0-6.0: the software AVX cost model is calibrated, not simulated)."""
+    s = get_spec("bf8_5")
+    ratio = rs.roofline_flops(s, rs.SPR_HBM) / rs.evaluate(s, rs.SPR_HBM).flops
+    assert 4.0 <= ratio <= 6.0
+
+
+def test_paper_bord_regions_hbm():
+    """Paper Fig. 4a/5a: MXFP4, BF16_10%, BF8_5% are VEC-bound on HBM;
+    BF16_100/50/30 and BF8_100 are MEM-bound."""
+    vec = {"mxfp4_100", "bf16_10", "bf8_5"}
+    mem = {"bf16_100", "bf16_50", "bf16_30", "bf8_100"}
+    for s in PAPER_SCHEMES:
+        pt = rs.evaluate(s, rs.SPR_HBM)
+        if s.name in vec:
+            assert pt.bound == "VEC", s.name
+        if s.name in mem:
+            assert pt.bound == "MEM", s.name
+
+
+def test_paper_bord_regions_ddr():
+    """Paper Fig. 5b: on DDR only the highest compression factors stay
+    VEC-bound ('all kernels except BF8 <=20% density are MEM-bound or very
+    close')."""
+    for s in PAPER_SCHEMES:
+        pt = rs.evaluate(s, rs.SPR_DDR)
+        if s.name in {"bf16_100", "bf16_50", "bf16_30", "bf8_100", "bf8_50"}:
+            assert pt.bound == "MEM", s.name
+    assert rs.evaluate(get_spec("bf8_5"), rs.SPR_DDR).bound == "VEC"
+
+
+def test_paper_4x_vos_not_enough():
+    """Paper Fig. 6: even 4x VOS leaves some kernels VEC-bound on HBM."""
+    prof = rs.SPR_HBM.scaled(vos_mult=4.0)
+    still_vec = [s.name for s in PAPER_SCHEMES
+                 if rs.evaluate(s, prof).bound == "VEC"]
+    assert still_vec  # not empty
+
+
+def test_paper_dse_best_is_32_8():
+    """Paper §9.2: {W=32, L=8} is the smallest pair with no VEC-bound kernel;
+    {8,4} is ~2x slower; {64,64} is <3% faster."""
+    res = dse.sweep_wl()
+    best = dse.best_wl(res)
+    assert (best.w, best.l) == (32, 8)
+    by = {(r.w, r.l): r for r in res}
+    assert 1.7 <= by[(32, 8)].mean_tps / by[(8, 4)].mean_tps <= 2.3
+    assert by[(64, 64)].mean_tps / by[(32, 8)].mean_tps <= 1.03
+
+
+def test_deca_bubble_model_limits():
+    """bpv: dense 8-bit with W=32,L=8 stalls ceil(32/8)-1 = 3 cycles; fully
+    provisioned (L_q >= W) never stalls; sparse in between."""
+    assert rs.deca_bubbles_per_vop(get_spec("bf8_100"), 32, 8) == 3.0
+    assert rs.deca_bubbles_per_vop(get_spec("bf8_100"), 32, 32) == 0.0
+    b = rs.deca_bubbles_per_vop(get_spec("bf8_50"), 32, 8)
+    assert 0.0 < b < 3.0
+
+
+@given(st.floats(min_value=0.05, max_value=1.0))
+@settings(max_examples=30, deadline=None)
+def test_bubbles_monotone_in_density(d):
+    """Sparser tiles never produce more bubbles (paper §6.1: 'fewer bubbles
+    are introduced for sparse schemes')."""
+    lo = rs.deca_bubbles_per_vop(CompressionSpec("bf8", max(d - 0.04, 0.01)), 32, 8)
+    hi = rs.deca_bubbles_per_vop(CompressionSpec("bf8", d), 32, 8)
+    assert lo <= hi + 1e-9
+
+
+def test_tpu_terms_and_bottleneck():
+    t = rs.tpu_terms(
+        "x", hlo_flops=1e15, hlo_bytes=1e12, collective_bytes=5e11,
+        vector_ops=1e12, n_chips=256,
+    )
+    assert t.bottleneck in ("MTX", "MEM", "VEC", "ICI")
+    assert t.t_bound == max(t.t_compute, t.t_memory, t.t_vector, t.t_collective)
