@@ -7,6 +7,11 @@ prefill + KV-cached decode, with every FC matmul running the
 decompress-on-the-fly GeMM. Reports compression factor and tokens/s.
 
 Run:  PYTHONPATH=src python examples/compressed_serving.py [--format bf8_50]
+
+Sharded decode: `--mesh DxM` lays the compressed weights (codes/mask/scales
+along the dense (K, N) axes) over a (data, model) device mesh — e.g.
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+  PYTHONPATH=src python examples/compressed_serving.py --mesh 2x2
 """
 import argparse
 import time
@@ -21,11 +26,32 @@ from repro.models.model import Model
 from repro.serve.engine import GenerationEngine
 
 
+def parse_mesh(arg):
+    """'DxM' -> a (data, model) mesh, or None for single-device serving."""
+    if not arg:
+        return None
+    try:
+        data, model = (int(x) for x in arg.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh expects DxM (e.g. 2x2), got {arg!r}")
+    n = jax.device_count()
+    if data * model > n:
+        raise SystemExit(
+            f"--mesh {arg} needs {data * model} devices, have {n} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+        )
+    from repro.launch.mesh import make_test_mesh
+
+    return make_test_mesh(data, model)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--format", default="mxfp4_100")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="shard serving over a (data, model) mesh, e.g. 2x2")
     args = ap.parse_args()
 
     cfg = get_smoke_config("llama3-8b")
@@ -43,7 +69,11 @@ def main():
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size, (args.batch, 16)).astype(np.int32)
 
-    engine = GenerationEngine(model, cparams, max_len=128, temperature=0.0)
+    mesh = parse_mesh(args.mesh)
+    if mesh is not None:
+        print(f"serving sharded over mesh {dict(mesh.shape)}")
+    engine = GenerationEngine(model, cparams, max_len=128, temperature=0.0,
+                              mesh=mesh)
     t0 = time.perf_counter()
     out = engine.generate(prompts, args.steps)
     dt = time.perf_counter() - t0

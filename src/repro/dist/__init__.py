@@ -1,0 +1,14 @@
+"""repro.dist — distributed-execution subsystem.
+
+Three modules (see docs/DESIGN.md §9 for the sharding rules):
+
+  sharding          mesh context (`use_mesh` / `active_ctx`), divisibility-
+                    aware axis resolution, param/opt/data PartitionSpec
+                    builders (CompressedTensor-aware), and activation
+                    constraints — all exact identities with no active mesh.
+  fault             deterministic fault injection, straggler detection, and
+                    checkpoint-restart training (bit-identical resume).
+  grad_compression  int8/bf8 quantized gradient all-reduce with persistent
+                    error-feedback residuals.
+"""
+from repro.dist import fault, grad_compression, sharding  # noqa: F401

@@ -1,0 +1,400 @@
+"""Sharding rules: one place that decides how every array in the system is
+laid out over a `jax.sharding.Mesh`.
+
+Axes (launch/mesh.py): `data` (batch / FSDP), `model` (tensor parallel),
+and optionally `pod` (a second batch axis for the multi-pod mesh). Rules
+are *divisibility-aware*: a dim is only sharded over an axis (or axis
+tuple) whose total size divides it, and no mesh axis is used twice within
+one PartitionSpec — `_resolve_dim` falls back to replication otherwise, so
+every spec this module produces is valid for any mesh shape.
+
+Entry points:
+  use_mesh(mesh, fsdp=..., mode=...)   context manager; activates a
+                                       ShardingCtx for constrain()/MoE
+  active_ctx()                         the innermost active ctx (or None)
+  spec_for(shape, roles, ctx)          roles -> PartitionSpec
+  param_spec_tree / opt_spec_tree / data_spec_tree
+                                       pytree spec builders (scan-stacked
+                                       and CompressedTensor aware)
+  constrain(x, kind) / constrain_qkv   activation sharding constraints;
+                                       exact identity with no active mesh
+
+CompressedTensor leaves (DECA-compressed weights) shard along the same
+logical (K, N) axes as the dense weight they replace: `codes (ng, ck, N)`,
+`mask (ng, N)` and `scales (ng, N)` put the K-axis sharding on the group
+dim `ng` (re-checking divisibility against ng — K % ax == 0 does not imply
+ng % ax == 0) and the N-axis sharding on their last dim, so a sharded
+decompress-GeMM reads only local codes/mask/scales.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Dict, Iterable, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.compression import CompressedTensor
+
+Axis = Union[str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    """Active sharding context: the mesh plus per-run policy knobs.
+
+    fsdp : shard weight contraction dims over the 'data' axis (ZeRO-3
+           style); launch/specs.py turns this on above a param threshold.
+    mode : 'train' | 'serve' — MoE gathers FSDP expert shards at point of
+           use in train, keeps them contraction-sharded at decode.
+    """
+
+    mesh: Mesh
+    fsdp: bool = False
+    mode: str = "train"
+
+    @property
+    def axis_sizes(self) -> Dict[str, int]:
+        return dict(self.mesh.shape)
+
+
+_STACK = threading.local()
+
+
+def active_ctx() -> Optional[ShardingCtx]:
+    stack = getattr(_STACK, "ctxs", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, *, fsdp: bool = False, mode: str = "train"):
+    """Activate `mesh` for the dynamic extent: constrain() becomes real,
+    MoE dispatch groups follow the batch sharding, spec builders resolve
+    against the mesh axes."""
+    ctx = ShardingCtx(mesh, fsdp=fsdp, mode=mode)
+    stack = getattr(_STACK, "ctxs", None)
+    if stack is None:
+        stack = _STACK.ctxs = []
+    stack.append(ctx)
+    try:
+        yield ctx
+    finally:
+        stack.pop()
+
+
+# ---------------------------------------------------------------------------
+# axis resolution
+# ---------------------------------------------------------------------------
+
+# candidates per logical role, tried in order
+_ROLE_AXES: Dict[str, Tuple[Axis, ...]] = {
+    "batch": (("pod", "data"), ("data",), ("pod",)),
+    "model": (("model",),),
+    "fsdp": (("data",),),
+    "expert": (("model",),),  # EP rides the model axis (no dedicated axis)
+}
+
+
+def _resolve_dim(
+    dim: int,
+    candidate_axes: Sequence[Axis],
+    ctx: Any,
+    used: set,
+) -> Optional[Axis]:
+    """First candidate mesh axis (or axis tuple) whose total size divides
+    `dim`, never reusing an axis already consumed by this spec. Returns the
+    bare axis name for single-axis candidates, the tuple for compound ones,
+    and None when nothing fits (replicate)."""
+    sizes = ctx.axis_sizes
+    for cand in candidate_axes:
+        axes = (cand,) if isinstance(cand, str) else tuple(cand)
+        if any(a in used or a not in sizes for a in axes):
+            continue
+        size = 1
+        for a in axes:
+            size *= sizes[a]
+        if size <= 0 or dim % size:
+            continue
+        used.update(axes)
+        return axes[0] if len(axes) == 1 else axes
+    return None
+
+
+def _resolve_role(dim: int, role: Optional[str], ctx: Any, used: set):
+    if role in (None, "none", "layers", "stack", "seq"):
+        return None
+    if role == "fsdp" and not getattr(ctx, "fsdp", False):
+        return None
+    return _resolve_dim(dim, _ROLE_AXES.get(role, ()), ctx, used)
+
+
+def spec_for(
+    shape: Sequence[int],
+    roles: Sequence[Optional[str]],
+    ctx: Any,
+    used: Optional[set] = None,
+) -> P:
+    """PartitionSpec for `shape` with one role per dim ('batch', 'model',
+    'fsdp', 'expert', 'none'/'layers'/'seq' -> replicated)."""
+    if ctx is None:
+        return P(*([None] * len(shape)))
+    used = set() if used is None else used
+    return P(*[
+        _resolve_role(dim, role, ctx, used) for dim, role in zip(shape, roles)
+    ])
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+# leaves that are never worth sharding (tiny, or not GeMM operands)
+_REPLICATED_TOKENS = (
+    "norm", "conv", "router", "bias", "a_param", "a_log", "dt_bias",
+    "b_a", "b_x", "d_skip", "pos_embed",
+)
+# weights whose *first* matrix dim is the model-parallel one (row-parallel
+# in megatron terms: contraction sharded over 'model', output over FSDP)
+_ROW_PARALLEL = ("wo", "w_down", "w_out", "out_proj", "embed")
+
+
+def _key_str(p: Any) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def _param_roles(
+    path_names: Tuple[str, ...], shape: Tuple[int, ...], scan_stacked: bool
+) -> Tuple[str, ...]:
+    """Per-dim roles for a parameter leaf, from its name and position.
+
+    Column-parallel weights (wq/wk/wv/w_up/w_gate/lm_head/...) shard
+    (contraction -> fsdp, output -> model); row-parallel ones
+    (wo/w_down/embed/...) the transpose. Scan-stacked leaves get an
+    unsharded leading layer dim; MoE expert dims ride the model axis.
+    """
+    name = path_names[-1] if path_names else ""
+    nd = len(shape)
+    roles = ["none"] * nd
+    if nd == 0 or any(t in name for t in _REPLICATED_TOKENS):
+        return tuple(roles)
+    i = 0
+    if scan_stacked and path_names and path_names[0] == "blocks":
+        i = 1  # (L, ...) layer-stack dim is scan-carried, never sharded
+    if "moe" in path_names and nd - i == 3:
+        roles[i] = "expert"
+        i += 1
+    if nd - i == 2:
+        if name in _ROW_PARALLEL:
+            roles[i], roles[i + 1] = "model", "fsdp"
+        else:
+            roles[i], roles[i + 1] = "fsdp", "model"
+    return tuple(roles)
+
+
+def _compressed_spec(
+    path_names: Tuple[str, ...],
+    ct: CompressedTensor,
+    ctx: Any,
+    scan_stacked: bool,
+) -> CompressedTensor:
+    """Spec 'tensor' for a CompressedTensor leaf: a CompressedTensor whose
+    codes/mask/scales children are PartitionSpecs sharded along the same
+    logical (K, N) axes as the dense weight the leaf replaces."""
+    k, n = ct.shape
+    codes_shape = tuple(ct.codes.shape)
+    lead = codes_shape[:-3]
+    ng = codes_shape[-3]
+    roles = _param_roles(path_names, lead + (k, n), scan_stacked)
+    used: set = set()
+    lead_entries = [
+        _resolve_role(dim, role, ctx, used)
+        for dim, role in zip(lead, roles[:-2])
+    ]
+    # K-axis sharding lands on the group dim; N-axis on the last dim. Both
+    # resolved once and reused so all three components stay aligned.
+    k_ax = _resolve_role(ng, roles[-2], ctx, used)
+    n_ax = _resolve_role(n, roles[-1], ctx, used)
+    codes_spec = P(*lead_entries, k_ax, None, n_ax)
+    gn_spec = P(*lead_entries, k_ax, n_ax)
+    return CompressedTensor(
+        codes=codes_spec,
+        mask=gn_spec if ct.mask is not None else None,
+        scales=gn_spec if ct.scales is not None else None,
+        spec=ct.spec,
+        shape=ct.shape,
+    )
+
+
+def _is_ct(x: Any) -> bool:
+    return isinstance(x, CompressedTensor)
+
+
+def param_spec_tree(aparams: Any, ctx: Any, *, scan_stacked: bool = False) -> Any:
+    """PartitionSpec pytree mirroring a param pytree (arrays or
+    ShapeDtypeStructs; CompressedTensor leaves handled whole)."""
+
+    def one(path, leaf):
+        names = tuple(_key_str(p) for p in path)
+        if _is_ct(leaf):
+            return _compressed_spec(names, leaf, ctx, scan_stacked)
+        shape = tuple(leaf.shape)
+        return spec_for(shape, _param_roles(names, shape, scan_stacked), ctx)
+
+    return jax.tree_util.tree_map_with_path(one, aparams, is_leaf=_is_ct)
+
+
+def opt_spec_tree(
+    aopt: Any, aparams: Any, ctx: Any, *, scan_stacked: bool = False
+) -> Any:
+    """Optimizer-state specs: each state leaf inherits the spec of the param
+    it tracks (AdamW mu/nu/master mirror the param tree; Adafactor factored
+    vr/vc get the param spec with the averaged-out dim removed)."""
+    pspecs = param_spec_tree(aparams, ctx, scan_stacked=scan_stacked)
+    flat_p: Dict[str, Any] = {}
+    leaves, _ = jax.tree_util.tree_flatten_with_path(
+        pspecs, is_leaf=lambda x: isinstance(x, (P, CompressedTensor))
+    )
+    for path, spec in leaves:
+        flat_p["/".join(_key_str(p) for p in path)] = spec
+
+    def one(path, leaf):
+        names = [_key_str(p) for p in path]
+        replicated = P(*([None] * getattr(leaf, "ndim", 0)))
+        tail = None
+        if names and names[-1] in ("vr", "vc", "v") and "/".join(names) not in flat_p:
+            tail = names[-1]
+            names = names[:-1]
+        for start in range(len(names) + 1):
+            key = "/".join(names[start:])
+            if key in flat_p:
+                spec = flat_p[key]
+                break
+        else:
+            return replicated
+        if isinstance(spec, CompressedTensor):  # never trained; replicate
+            return replicated
+        entries = tuple(spec)
+        if tail == "vr":  # param shape minus last dim
+            return P(*entries[:-1])
+        if tail == "vc":  # param shape minus second-to-last dim
+            return P(*(entries[:-2] + entries[-1:]))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, aopt)
+
+
+# ---------------------------------------------------------------------------
+# input / activation-state specs
+# ---------------------------------------------------------------------------
+
+_CACHE_LEAVES = ("k", "v", "pos", "length", "conv", "h")
+
+
+def data_spec_tree(tree: Any, ctx: Any, *, scan_stacked: bool = False) -> Any:
+    """Specs for input pytrees: training/prefill batches (tokens / labels /
+    mask / embeds / positions), KV-cache and SSM-state trees (optionally
+    layer-stacked), and CompressedTensor leaves (sharded like the dense
+    weight they stand in for). Batch dims shard over ('pod','data'); the KV
+    head dim over 'model'; everything else replicates."""
+
+    def one(path, leaf):
+        names = tuple(_key_str(p) for p in path)
+        name = names[-1] if names else ""
+        if _is_ct(leaf):
+            return _compressed_spec(names, leaf, ctx, scan_stacked)
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        if nd == 0 or name in ("pos", "length"):
+            return P(*([None] * nd))
+        used: set = set()
+        entries = []
+        i = 0
+        if scan_stacked and name in _CACHE_LEAVES:
+            entries.append(None)  # leading layer-stack dim
+            i = 1
+            if i >= nd:
+                return P(*entries)
+        if name == "positions" and nd - i == 3:
+            entries.append(None)  # (3, B, S) M-RoPE stream dim
+            i += 1
+        entries.append(_resolve_dim(shape[i], _ROLE_AXES["batch"], ctx, used))
+        i += 1
+        for j in range(i, nd):
+            if name in ("k", "v") and j == nd - 2:  # KV heads over 'model'
+                entries.append(
+                    _resolve_dim(shape[j], _ROLE_AXES["model"], ctx, used)
+                )
+            else:
+                entries.append(None)
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(one, tree, is_leaf=_is_ct)
+
+
+# ---------------------------------------------------------------------------
+# activation constraints (called from model/layer code)
+# ---------------------------------------------------------------------------
+
+# per-dim roles for each activation layout the layers emit
+_ACT_ROLES: Dict[str, Tuple[str, ...]] = {
+    "bsd": ("batch", "none", "none"),       # residual stream (B, S, D)
+    "bshd": ("batch", "none", "model", "none"),  # per-head q/k/v/attn-out
+    "bsf": ("batch", "none", "model"),      # MLP hidden (B, S, F)
+    "btv": ("batch", "none", "model"),      # logits (B, S, V)
+    "egcd": ("expert", "batch", "none", "none"),  # MoE dispatch (E, G, c, D)
+    "egcf": ("expert", "batch", "none", "none"),  # MoE hidden (E, G, c, F)
+    "edf_use": ("expert", "none", "none"),  # expert weight at point of use
+    "efd_use": ("expert", "none", "none"),  # (FSDP shard all-gathered)
+}
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    """with_sharding_constraint under the active mesh; exact identity when
+    no mesh is active (single-device tests and CPU smoke runs untouched)."""
+    ctx = active_ctx()
+    if ctx is None:
+        return x
+    roles = _ACT_ROLES[kind]
+    if len(roles) != x.ndim:  # defensive: layout changed upstream
+        return x
+    spec = spec_for(tuple(x.shape), roles, ctx)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def constrain_qkv(
+    q: jax.Array, k: jax.Array, v: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    return constrain(q, "bshd"), constrain(k, "bshd"), constrain(v, "bshd")
+
+
+# ---------------------------------------------------------------------------
+# placement helper (serving path)
+# ---------------------------------------------------------------------------
+
+def shard_params(params: Any, ctx: ShardingCtx, *, scan_stacked: bool = False):
+    """device_put a (possibly compressed) param tree onto ctx.mesh with
+    param_spec_tree placements — the serving-side analog of the training
+    in_shardings."""
+    specs = param_spec_tree(params, ctx, scan_stacked=scan_stacked)
+    put = lambda leaf, spec: jax.device_put(leaf, NamedSharding(ctx.mesh, spec))
+
+    def one(leaf, spec):
+        if _is_ct(leaf):
+            return CompressedTensor(
+                codes=put(leaf.codes, spec.codes),
+                mask=None if leaf.mask is None else put(leaf.mask, spec.mask),
+                scales=(
+                    None if leaf.scales is None else put(leaf.scales, spec.scales)
+                ),
+                spec=leaf.spec,
+                shape=leaf.shape,
+            )
+        return put(leaf, spec)
+
+    return jax.tree_util.tree_map(one, params, specs, is_leaf=_is_ct)

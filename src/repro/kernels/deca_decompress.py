@@ -154,9 +154,18 @@ def decompress_pallas(
     spec = ct.spec
     K, N = ct.shape
     G = spec.group
+    if K % G:
+        # compression produces whole groups only; without this the
+        # block-shrink loop below underflows block_k to 0 (div-by-zero)
+        raise ValueError(
+            f"decompress_pallas: K={K} is not a multiple of the compression "
+            f"group {G} (K % G == {K % G}); CompressedTensor shape is invalid"
+        )
     block_k = min(block_k, K)
+    block_k = max(G, block_k - block_k % G)  # keep whole groups per block
     block_n = min(block_n, N)
-    # shrink blocks until they tile the array exactly
+    # shrink blocks until they tile the array exactly (terminates at G,
+    # which always divides K after the check above)
     while K % block_k:
         block_k -= G
     while N % block_n:

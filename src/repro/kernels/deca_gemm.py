@@ -72,9 +72,16 @@ def decompress_gemm_pallas(
     if x.shape[1] != K:
         raise ValueError(f"x K dim {x.shape[1]} != weight K {K}")
     G = spec.group
+    if K % G:
+        raise ValueError(
+            f"decompress_gemm_pallas: K={K} is not a multiple of the "
+            f"compression group {G} (K % G == {K % G}); CompressedTensor "
+            "shape is invalid"
+        )
 
     block_m = min(block_m, M)
     block_k = min(block_k, K)
+    block_k = max(G, block_k - block_k % G)  # whole groups per block
     block_n = min(block_n, N)
     while M % block_m:
         block_m -= 1

@@ -100,6 +100,8 @@ def _lower_and_compile(cfg, shape, model, multi_pod, compress=None):
 
 def _costs_of(compiled):
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # per-program list on some backends
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     byts = float(cost.get("bytes accessed", 0.0))
     hlo = compiled.as_text()

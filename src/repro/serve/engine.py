@@ -10,6 +10,7 @@ The engine supports compressed-weight serving: pass params through
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -18,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.dist import sharding as sh
 from repro.models.model import Model
 
 
@@ -55,6 +57,12 @@ class GenerationEngine:
     replaced by queued prompts between decode steps (admission happens on
     host, the decode step itself is a fixed-shape jitted function — the
     standard continuous-batching-on-XLA compromise).
+
+    Sharded serving: pass a `mesh` and the engine places params — including
+    DECA CompressedTensor weights, whose codes/mask/scales shard along the
+    dense (K, N) axes — with `dist.sharding.param_spec_tree` and traces
+    prefill/decode under `use_mesh(mode="serve")`, so compressed-weight
+    decode runs tensor-parallel. With `mesh=None` nothing changes.
     """
 
     def __init__(
@@ -65,15 +73,27 @@ class GenerationEngine:
         max_len: int = 2048,
         temperature: float = 0.0,
         seed: int = 0,
+        mesh: Optional[jax.sharding.Mesh] = None,
+        fsdp: bool = False,
     ):
         self.model = model
         self.cfg = model.cfg
+        self.mesh = mesh
+        self.fsdp = fsdp
+        if mesh is not None:
+            ctx = sh.ShardingCtx(mesh, fsdp=fsdp, mode="serve")
+            params = sh.shard_params(params, ctx, scan_stacked=model.uniform)
         self.params = params
         self.max_len = max_len
         self.temperature = temperature
         self._key = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(make_prefill_step(model, cache_len=max_len))
         self._decode = jax.jit(make_decode_step(model))
+
+    def _mesh_scope(self):
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return sh.use_mesh(self.mesh, fsdp=self.fsdp, mode="serve")
 
     def _sample(self, logits: jax.Array) -> jax.Array:
         if self.temperature <= 0.0:
@@ -90,14 +110,15 @@ class GenerationEngine:
         if self.cfg.mrope_sections:
             pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
             batch["positions"] = jnp.broadcast_to(pos, (3, b, s))
-        logits, cache = self._prefill(self.params, batch)
-        out = []
-        tok = self._sample(logits)[:, None]
-        for i in range(n_steps):
-            out.append(np.asarray(tok)[:, 0])
-            pos = jnp.full((b, 1), s + i, jnp.int32)
-            if self.cfg.mrope_sections:
-                pos = jnp.full((3, b, 1), s + i, jnp.int32)
-            logits, cache = self._decode(self.params, tok, pos, cache)
+        with self._mesh_scope():
+            logits, cache = self._prefill(self.params, batch)
+            out = []
             tok = self._sample(logits)[:, None]
+            for i in range(n_steps):
+                out.append(np.asarray(tok)[:, 0])
+                pos = jnp.full((b, 1), s + i, jnp.int32)
+                if self.cfg.mrope_sections:
+                    pos = jnp.full((3, b, 1), s + i, jnp.int32)
+                logits, cache = self._decode(self.params, tok, pos, cache)
+                tok = self._sample(logits)[:, None]
         return np.stack(out, axis=1)

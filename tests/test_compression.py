@@ -4,6 +4,8 @@ import math
 import numpy as np
 import pytest
 import jax.numpy as jnp
+
+pytest.importorskip("hypothesis", reason="install the [test] extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.compression import (

@@ -3,6 +3,8 @@ paper's published observations (the repro=5 validation gate)."""
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="install the [test] extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import dse, roofsurface as rs
