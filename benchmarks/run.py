@@ -9,6 +9,7 @@ from __future__ import annotations
 import sys
 
 from benchmarks import bench_paper_tables as pt
+from benchmarks import bench_serving as bs
 from benchmarks import bench_tpu_fused as tf
 from benchmarks.common import emit
 
@@ -25,6 +26,7 @@ ALL = [
     ("table4", pt.bench_table4),
     ("tpu_fused", tf.bench_fused_vs_unfused),
     ("pallas_interpret", tf.bench_pallas_interpret_correctness),
+    ("serving_paged", bs.bench_paged_serving),
 ]
 
 

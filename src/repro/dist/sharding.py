@@ -293,7 +293,7 @@ def opt_spec_tree(
 # input / activation-state specs
 # ---------------------------------------------------------------------------
 
-_CACHE_LEAVES = ("k", "v", "pos", "length", "conv", "h")
+_CACHE_LEAVES = ("k", "v", "pos", "length", "conv", "h", "kp", "vp", "ppos")
 
 
 def data_spec_tree(tree: Any, ctx: Any, *, scan_stacked: bool = False) -> Any:
@@ -310,7 +310,7 @@ def data_spec_tree(tree: Any, ctx: Any, *, scan_stacked: bool = False) -> Any:
             return _compressed_spec(names, leaf, ctx, scan_stacked)
         shape = tuple(leaf.shape)
         nd = len(shape)
-        if nd == 0 or name in ("pos", "length"):
+        if nd == 0 or name in ("pos", "length", "ppos"):
             return P(*([None] * nd))
         used: set = set()
         entries = []
@@ -320,6 +320,18 @@ def data_spec_tree(tree: Any, ctx: Any, *, scan_stacked: bool = False) -> Any:
             i = 1
             if i >= nd:
                 return P(*entries)
+        if name in ("kp", "vp"):
+            # paged KV pool (..., NB, bsize, Hkv, Dh): pages replicated over
+            # the data axis (every data shard reads any request's blocks),
+            # KV heads over 'model'
+            for j in range(i, nd):
+                if j == nd - 2:
+                    entries.append(
+                        _resolve_dim(shape[j], _ROLE_AXES["model"], ctx, used)
+                    )
+                else:
+                    entries.append(None)
+            return P(*entries)
         if name == "positions" and nd - i == 3:
             entries.append(None)  # (3, B, S) M-RoPE stream dim
             i += 1
@@ -351,6 +363,7 @@ _ACT_ROLES: Dict[str, Tuple[str, ...]] = {
     "egcf": ("expert", "batch", "none", "none"),  # MoE hidden (E, G, c, F)
     "edf_use": ("expert", "none", "none"),  # expert weight at point of use
     "efd_use": ("expert", "none", "none"),  # (FSDP shard all-gathered)
+    "pkv": ("none", "none", "model", "none"),  # paged KV pool (NB, bs, Hkv, Dh)
 }
 
 

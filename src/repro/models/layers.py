@@ -75,6 +75,22 @@ def apply_rope(
     return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
 
 
+def apply_rope_batched(
+    x: jax.Array,  # (B, S, H, Dh)
+    positions: jax.Array,  # (B, S) int32 — per-request positions
+    theta: float,
+) -> jax.Array:
+    """RoPE with per-request positions (paged decode: every active slot sits
+    at its own depth). Same per-element math as `apply_rope`, so a request's
+    rotated q/k are identical whichever path served it."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    angles = positions[:, :, None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
 def apply_mrope(
     x: jax.Array,  # (B, S, H, Dh)
     positions: jax.Array,  # (3, B, S) — temporal / height / width ids
@@ -115,15 +131,18 @@ def init_attention(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
 
 
 def _attn_scores_mask(
-    q_pos: jax.Array,  # (Sq,) absolute positions of queries
-    k_pos: jax.Array,  # (Sk,)
+    q_pos: jax.Array,  # (Sq,) or (B, Sq) absolute positions of queries
+    k_pos: jax.Array,  # (Sk,) or (B, Sk)
     causal: bool,
     window: int,
 ) -> jax.Array:
-    """(Sq, Sk) additive mask in f32."""
-    dq = q_pos[:, None]
-    dk = k_pos[None, :]
-    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), jnp.bool_)
+    """Additive mask in f32: (Sq, Sk) for shared positions, (B, Sq, Sk) when
+    either side carries per-request positions (paged decode)."""
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    ok = jnp.broadcast_to(
+        jnp.ones((), jnp.bool_), jnp.broadcast_shapes(dq.shape, dk.shape)
+    )
     if causal:
         ok &= dk <= dq
     if window > 0:
@@ -148,7 +167,10 @@ def attention_core(
     q_chunk: int = 1024,
 ) -> jax.Array:
     """Grouped-query attention, chunked over queries so peak memory is
-    O(q_chunk * Sk) rather than O(Sq * Sk). Mixed-precision: scores in f32."""
+    O(q_chunk * Sk) rather than O(Sq * Sk). Mixed-precision: scores in f32.
+
+    `q_pos`/`k_pos` may be shared `(Sq,)`/`(Sk,)` or per-request
+    `(B, Sq)`/`(B, Sk)` (paged KV: each request gathers its own blocks)."""
     b, sq, hq, dh = q.shape
     _, sk, hkv, _ = k.shape
     group = hq // hkv
@@ -161,7 +183,10 @@ def attention_core(
             preferred_element_type=jnp.float32,
         ) * scale
         scores = _softcap(scores, softcap)
-        scores = scores + _attn_scores_mask(qp, k_pos, causal, window)
+        mask = _attn_scores_mask(qp, k_pos, causal, window)
+        if mask.ndim == 3:  # (B, Cq, Sk) -> broadcast over (Hkv, G)
+            mask = mask[:, None, None]
+        scores = scores + mask
         probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
         return jnp.einsum(
             "bhgqk,bkhd->bqhgd", probs, v, preferred_element_type=jnp.float32
@@ -173,9 +198,14 @@ def attention_core(
         n_chunks = math.ceil(sq / q_chunk)
         pad = n_chunks * q_chunk - sq
         qg_p = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
-        qp_p = jnp.pad(q_pos, (0, pad))
         qg_c = qg_p.reshape(b, n_chunks, q_chunk, hkv, group, dh)
-        qp_c = qp_p.reshape(n_chunks, q_chunk)
+        if q_pos.ndim == 1:
+            qp_c = jnp.pad(q_pos, (0, pad)).reshape(n_chunks, q_chunk)
+        else:  # (B, Sq) per-request positions
+            qp_p = jnp.pad(q_pos, ((0, 0), (0, pad)))
+            qp_c = jnp.moveaxis(
+                qp_p.reshape(b, n_chunks, q_chunk), 1, 0
+            )  # (n_chunks, B, Cq)
         out = jax.lax.map(
             lambda args: chunk_attn(args[0], args[1]),
             (jnp.moveaxis(qg_c, 1, 0), qp_c),
@@ -244,6 +274,144 @@ def update_cache(
             cache["pos"], pos.astype(jnp.int32), idx, axis=0
         )
     return {"k": ck, "v": cv, "pos": cp, "length": length + s}
+
+
+def init_paged_kv_cache(
+    num_blocks: int,
+    block_size: int,
+    hkv: int,
+    dh: int,
+    dtype=jnp.bfloat16,
+    quant: str = "none",
+) -> Dict[str, jax.Array]:
+    """Block-paged KV pool: `num_blocks` pages of `block_size` tokens shared
+    by all requests (device row 0 is the null page — pad/inactive writes land
+    there and stay masked via the position sentinel). Quantized (bf8) pools
+    encode on write like the ring cache."""
+    kv_dtype = jnp.uint8 if quant == "bf8" else dtype
+    return {
+        "kp": jnp.zeros((num_blocks, block_size, hkv, dh), kv_dtype),
+        "vp": jnp.zeros((num_blocks, block_size, hkv, dh), kv_dtype),
+        "ppos": jnp.full((num_blocks, block_size), CACHE_EMPTY_POS, jnp.int32),
+    }
+
+
+def paged_update_cache(
+    cache: Dict[str, jax.Array],
+    k: jax.Array,          # (B, S, Hkv, Dh)
+    v: jax.Array,          # (B, S, Hkv, Dh)
+    write_pos: jax.Array,  # (B, S) int32; CACHE_EMPTY_POS for pad tokens
+    write_slots: jax.Array,  # (B, S) int32 flat slot ids (block * bsize + off)
+    fresh_pages: Optional[jax.Array] = None,  # (F,) page ids, 0 = none
+) -> Dict[str, jax.Array]:
+    """Scatter S tokens per request into the shared pool. Slot ids are
+    host-computed from each request's block table; pad tokens target the
+    null page (their position stays the empty sentinel, so reads mask them).
+
+    `fresh_pages` lists pages newly taken from the free list this step:
+    their position plane is scrubbed to the empty sentinel *before* the
+    scatter, so a page recycled from an evicted request can never leak the
+    old tenant's KV entries into a gather-read. Entry 0 (the null page,
+    always empty) pads the fixed shape."""
+    if cache["kp"].dtype == jnp.uint8:
+        k, v = quantize_bf8_jnp(k), quantize_bf8_jnp(v)
+    nb, bs, hkv, dh = cache["kp"].shape
+    flat = write_slots.reshape(-1)
+    kp = (
+        cache["kp"].reshape(nb * bs, hkv, dh)
+        .at[flat].set(k.reshape(-1, hkv, dh).astype(cache["kp"].dtype))
+        .reshape(nb, bs, hkv, dh)
+    )
+    vp = (
+        cache["vp"].reshape(nb * bs, hkv, dh)
+        .at[flat].set(v.reshape(-1, hkv, dh).astype(cache["vp"].dtype))
+        .reshape(nb, bs, hkv, dh)
+    )
+    ppos = cache["ppos"]
+    if fresh_pages is not None:
+        ppos = ppos.at[fresh_pages].set(CACHE_EMPTY_POS)
+    ppos = (
+        ppos.reshape(nb * bs)
+        .at[flat].set(write_pos.reshape(-1).astype(jnp.int32))
+        .reshape(nb, bs)
+    )
+    return {
+        "kp": constrain(kp, "pkv"),
+        "vp": constrain(vp, "pkv"),
+        "ppos": ppos,
+    }
+
+
+def paged_gather_kv(
+    cache: Dict[str, jax.Array],
+    block_tables: jax.Array,  # (B, MB) int32 device page ids (0 = null page)
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Gather each request's pages into a contiguous (B, MB*bsize, Hkv, Dh)
+    KV view plus per-request key positions (empty slots carry the sentinel
+    and mask to exactly-zero attention weight). Quantized pools decode on
+    read — the DECA dequantize-on-read path."""
+    k = jnp.take(cache["kp"], block_tables, axis=0)  # (B, MB, bs, Hkv, Dh)
+    v = jnp.take(cache["vp"], block_tables, axis=0)
+    pos = jnp.take(cache["ppos"], block_tables, axis=0)  # (B, MB, bs)
+    b, mb, bs = pos.shape
+    k = k.reshape(b, mb * bs, *k.shape[3:])
+    v = v.reshape(b, mb * bs, *v.shape[3:])
+    if k.dtype == jnp.uint8:
+        k, v = dequantize_bf8_jnp(k), dequantize_bf8_jnp(v)
+    return k, v, pos.reshape(b, mb * bs)
+
+
+def paged_attention_block(
+    params: Params,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,      # (B, S) or (3, B, S) — per-request positions
+    local: bool,
+    cache: Dict[str, jax.Array],
+    block_tables: jax.Array,   # (B, MB)
+    write_slots: jax.Array,    # (B, S)
+    write_pos: jax.Array,      # (B, S)
+    fresh_pages: Optional[jax.Array] = None,  # (F,)
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Attention layer against the paged pool: proj -> per-request rope ->
+    scatter into pool -> gather-read -> attn -> out. The gathered key order
+    is position order (table slot p//bsize, offset p%bsize), so real-token
+    accumulation matches the dense ring cache."""
+    b, s, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = mm(x, params["wq"]).reshape(b, s, hq, dh)
+    k = mm(x, params["wk"]).reshape(b, s, hkv, dh)
+    v = mm(x, params["wv"]).reshape(b, s, hkv, dh)
+    q, k, v = constrain_qkv(q, k, v)
+
+    if cfg.mrope_sections:
+        mpos = positions if positions.ndim == 3 else jnp.broadcast_to(
+            positions, (3,) + positions.shape
+        )
+        tok_pos = mpos[0]
+        q = apply_mrope(q, mpos, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, mpos, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.pos_emb == "rope":
+        tok_pos = positions if positions.ndim == 2 else positions[0]
+        q = apply_rope_batched(q, tok_pos, cfg.rope_theta)
+        k = apply_rope_batched(k, tok_pos, cfg.rope_theta)
+    else:
+        tok_pos = positions if positions.ndim == 2 else positions[0]
+
+    new_cache = paged_update_cache(
+        cache, k, v, write_pos, write_slots, fresh_pages
+    )
+    k_all, v_all, k_pos = paged_gather_kv(new_cache, block_tables)
+    k_all, v_all = constrain(k_all, "bshd"), constrain(v_all, "bshd")
+    out = attention_core(
+        q, k_all, v_all,
+        q_pos=tok_pos, k_pos=k_pos,
+        causal=cfg.causal, window=cfg.window if local else 0,
+        softcap=cfg.attn_softcap,
+    )
+    out = constrain(out, "bshd")
+    return mm(out.reshape(b, s, hq * dh), params["wo"]), new_cache
 
 
 def attention_block(

@@ -129,20 +129,55 @@ class Model:
             return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
         return {str(i): c for i, c in enumerate(caches)}
 
+    def init_paged_cache(
+        self, num_blocks: int, block_size: int, dtype=jnp.bfloat16
+    ) -> Any:
+        """Block-paged KV pools (serve/paged_cache.py owns the block tables).
+
+        `num_blocks` counts allocatable pages; one extra null page (device
+        row 0) absorbs pad/inactive writes. Only attention stacks page —
+        ssm/rec state is O(1) per request and needs no paging."""
+        cfg = self.cfg
+        bad = [k for k in self.kinds if k not in ("attn", "attn_local")]
+        if bad:
+            raise NotImplementedError(
+                f"paged KV serving needs an attention stack, got {set(bad)}"
+            )
+        caches = [
+            L.init_paged_kv_cache(
+                num_blocks + 1, block_size, cfg.n_kv_heads, cfg.d_head, dtype,
+                quant=cfg.kv_quant,
+            )
+            for _ in self.kinds
+        ]
+        if self.uniform:
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+        return {str(i): c for i, c in enumerate(caches)}
+
     # ------------------------------------------------------------------
     # forward
     # ------------------------------------------------------------------
     def _block_apply(
-        self, p: Params, x: jax.Array, kind: str, positions, cache
+        self, p: Params, x: jax.Array, kind: str, positions, cache, paged=None
     ) -> Tuple[jax.Array, Any, jax.Array]:
         cfg = self.cfg
         aux = jnp.zeros((), jnp.float32)
         h = L.rms_norm(p["pre_norm"], x, cfg.norm_eps)
         if kind in ("attn", "attn_local"):
-            out, new_cache = L.attention_block(
-                p["attn"], h, cfg, positions=positions,
-                local=(kind == "attn_local"), cache=cache,
-            )
+            if paged is not None:
+                out, new_cache = L.paged_attention_block(
+                    p["attn"], h, cfg, positions=positions,
+                    local=(kind == "attn_local"), cache=cache,
+                    block_tables=paged["block_tables"],
+                    write_slots=paged["write_slots"],
+                    write_pos=paged["write_pos"],
+                    fresh_pages=paged.get("fresh_pages"),
+                )
+            else:
+                out, new_cache = L.attention_block(
+                    p["attn"], h, cfg, positions=positions,
+                    local=(kind == "attn_local"), cache=cache,
+                )
             if cfg.post_norms:
                 out = L.rms_norm(p["post_attn_norm"], out, cfg.norm_eps)
         elif kind == "ssm":
@@ -173,8 +208,15 @@ class Model:
         positions: Optional[jax.Array] = None,  # (B, S) or (3, B, S)
         cache: Optional[Any] = None,
         remat: bool = False,
+        paged: Optional[Dict[str, jax.Array]] = None,
     ) -> Tuple[jax.Array, Any, jax.Array]:
-        """Returns (logits (B, S, V), new_cache, moe_aux_loss)."""
+        """Returns (logits (B, S, V), new_cache, moe_aux_loss).
+
+        `paged` routes attention through the block-paged KV pool instead of
+        the dense ring cache: {block_tables (B, MB), write_slots (B, S),
+        write_pos (B, S)} — host-computed by serve/paged_cache.py. With
+        paged, `cache` must be an `init_paged_cache` pool tree and
+        `positions` carries true per-request positions."""
         cfg = self.cfg
         if embeds is None:
             x = jnp.take(params["embed"], tokens, axis=0)
@@ -191,6 +233,9 @@ class Model:
             x = x + jnp.take(params["pos_embed"], idx, axis=0)
         x = constrain(x.astype(jnp.bfloat16), "bsd")
 
+        if paged is not None and cache is None:
+            raise ValueError("paged forward requires an init_paged_cache pool")
+
         block = self._block_apply
         if remat:
             block = jax.checkpoint(
@@ -206,7 +251,9 @@ class Model:
                     p_l, cache_l = per_layer, None
                 else:
                     p_l, cache_l = per_layer
-                xc, new_cache_l, aux_l = block(p_l, xc, kind, positions, cache_l)
+                xc, new_cache_l, aux_l = block(
+                    p_l, xc, kind, positions, cache_l, paged
+                )
                 return (xc, aux_acc + aux_l), new_cache_l
 
             xs = params["blocks"] if cache is None else (params["blocks"], cache)
@@ -219,7 +266,7 @@ class Model:
             for i, kind in enumerate(self.kinds):
                 cache_l = cache[str(i)] if cache is not None else None
                 x, nc, aux_l = block(
-                    params["layers"][str(i)], x, kind, positions, cache_l
+                    params["layers"][str(i)], x, kind, positions, cache_l, paged
                 )
                 aux = aux + aux_l
                 if cache is not None:
@@ -279,5 +326,30 @@ class Model:
         """One next-token step against a filled cache. Returns (logits(B,V), cache)."""
         logits, new_cache, _ = self.forward(
             params, tokens=tokens, positions=positions, cache=cache
+        )
+        return logits[:, -1, :], new_cache
+
+    def decode_step_paged(
+        self,
+        params: Params,
+        tokens: jax.Array,        # (B, 1)
+        positions: jax.Array,     # (B, 1) true per-request positions
+        cache: Any,               # init_paged_cache pool tree
+        block_tables: jax.Array,  # (B, MB)
+        write_slots: jax.Array,   # (B, 1)
+        write_pos: jax.Array,     # (B, 1)
+        fresh_pages: jax.Array,   # (B,) pages newly allocated this step
+    ) -> Tuple[jax.Array, Any]:
+        """One next-token step over the active continuous-batching slots,
+        reading/writing the block-paged pool. Fixed-shape: B is the slot
+        count and MB the max pages per request, so it jits once."""
+        logits, new_cache, _ = self.forward(
+            params, tokens=tokens, positions=positions, cache=cache,
+            paged={
+                "block_tables": block_tables,
+                "write_slots": write_slots,
+                "write_pos": write_pos,
+                "fresh_pages": fresh_pages,
+            },
         )
         return logits[:, -1, :], new_cache

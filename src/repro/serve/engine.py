@@ -1,4 +1,4 @@
-"""Serving: prefill / decode step builders and a batched generation engine.
+"""Serving: prefill / decode step builders and the generation engine.
 
 `make_prefill_step` / `make_decode_step` are the units the multi-pod dry-run
 lowers (`decode_*` / `long_*` cells lower serve_step — one new token against
@@ -7,20 +7,35 @@ a seq_len KV cache — per the assignment).
 The engine supports compressed-weight serving: pass params through
 `compress_params` and the FC matmuls route through the DECA decompress-GeMM
 (kernels/ops.py) — the paper's technique on the serving critical path.
+
+Two cache regimes (DESIGN.md §6/§10):
+
+  paged (default for attention stacks)
+      block-paged KV pool + continuous-batching scheduler. Request-level
+      API: `submit()` / `run_until_drained()`; `generate()` is a thin
+      wrapper that submits one request per prompt row. A request at length
+      `len` holds ceil(len / block_size) pages — nothing is padded to
+      max_len.
+  dense (`paged=False`, and the fallback for ssm/rec stacks)
+      the legacy fixed-slot ring cache: one (B, max_len) batch runs to
+      completion. Kept as the golden reference the paged path is tested
+      against, and for recurrent models whose state is O(1) per request.
 """
 from __future__ import annotations
 
 import contextlib
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+import math
+from typing import Any, Callable, Dict, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
 from repro.dist import sharding as sh
 from repro.models.model import Model
+from repro.serve.paged_cache import PagedKVCache
+from repro.serve.scheduler import Scheduler
 
 
 def make_prefill_step(model: Model, cache_len: Optional[int] = None) -> Callable:
@@ -50,19 +65,65 @@ def make_decode_step(model: Model) -> Callable:
     return serve_step
 
 
-class GenerationEngine:
-    """Batched greedy/temperature generation with continuous-batching slots.
+def make_paged_prefill_step(model: Model) -> Callable:
+    """paged_prefill(params, tokens (1,Sp), positions, cache, block_tables,
+    write_slots, write_pos, fresh_pages) -> (logits (1,Sp,V), cache). One
+    jit shape per page-rounded prompt length (<= max_blocks shapes total)."""
 
-    Slot model: a fixed batch of B request slots; finished requests are
-    replaced by queued prompts between decode steps (admission happens on
-    host, the decode step itself is a fixed-shape jitted function — the
-    standard continuous-batching-on-XLA compromise).
+    def paged_prefill(params, tokens, positions, cache, tables, slots, wpos,
+                      fresh):
+        logits, new_cache, _ = model.forward(
+            params, tokens=tokens, positions=positions, cache=cache,
+            paged={
+                "block_tables": tables,
+                "write_slots": slots,
+                "write_pos": wpos,
+                "fresh_pages": fresh,
+            },
+        )
+        return logits, new_cache
+
+    return paged_prefill
+
+
+def make_paged_decode_step(model: Model) -> Callable:
+    """paged_step(params, tokens (M,1), positions, cache, block_tables,
+    write_slots, write_pos, fresh_pages) -> (logits (M,V), cache). Fixed
+    shape over the M continuous-batching slots — jits exactly once."""
+
+    def paged_step(params, tokens, positions, cache, tables, slots, wpos,
+                   fresh):
+        return model.decode_step_paged(
+            params, tokens, positions, cache, tables, slots, wpos, fresh
+        )
+
+    return paged_step
+
+
+class GenerationEngine:
+    """Continuous-batching generation over a block-paged KV cache.
+
+    Request model: `submit()` enqueues a prompt; `run_until_drained()` steps
+    the scheduler — per-step admission into `max_slots` decode slots while
+    free pages suffice, page-granular KV allocation, eviction on EOS or
+    length cap — until every request completes. Admission happens on host;
+    prefill (page-rounded prompt lengths) and the slot-batched decode step
+    are fixed-shape jitted functions.
+
+    Sampling is keyed per request on (seed, request id, token index), so a
+    request's tokens are independent of admission order and of whatever
+    else shares the batch.
 
     Sharded serving: pass a `mesh` and the engine places params — including
     DECA CompressedTensor weights, whose codes/mask/scales shard along the
-    dense (K, N) axes — with `dist.sharding.param_spec_tree` and traces
-    prefill/decode under `use_mesh(mode="serve")`, so compressed-weight
-    decode runs tensor-parallel. With `mesh=None` nothing changes.
+    dense (K, N) axes — with `dist.sharding.param_spec_tree`, lays the KV
+    pool out with the §10 rule (pages replicated over 'data', KV heads over
+    'model'), and traces prefill/decode under `use_mesh(mode="serve")`.
+    With `mesh=None` nothing changes.
+
+    `paged="auto"` (default) uses the paged path for attention stacks and
+    falls back to the dense ring cache for ssm/rec stacks; `paged=False`
+    forces the legacy fixed-batch path (the golden reference in tests).
     """
 
     def __init__(
@@ -75,6 +136,10 @@ class GenerationEngine:
         seed: int = 0,
         mesh: Optional[jax.sharding.Mesh] = None,
         fsdp: bool = False,
+        paged: Union[bool, str] = "auto",
+        block_size: int = 32,
+        max_slots: int = 4,
+        num_blocks: Optional[int] = None,
     ):
         self.model = model
         self.cfg = model.cfg
@@ -86,39 +151,169 @@ class GenerationEngine:
         self.params = params
         self.max_len = max_len
         self.temperature = temperature
-        self._key = jax.random.PRNGKey(seed)
+        self._base_key = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(make_prefill_step(model, cache_len=max_len))
         self._decode = jax.jit(make_decode_step(model))
+
+        attn_only = all(k in ("attn", "attn_local") for k in model.kinds)
+        if paged == "auto":
+            paged = attn_only
+        self.paged = bool(paged)
+        self.scheduler: Optional[Scheduler] = None
+        if self.paged:
+            self.block_size = block_size
+            self.max_blocks = math.ceil(max_len / block_size)
+            if num_blocks is None:
+                num_blocks = max_slots * self.max_blocks
+            self.kv = PagedKVCache(
+                model, num_blocks=num_blocks, block_size=block_size
+            )
+            if mesh is not None:
+                ctx = sh.ShardingCtx(mesh, fsdp=fsdp, mode="serve")
+                specs = sh.data_spec_tree(
+                    self.kv.pools, ctx, scan_stacked=model.uniform
+                )
+                self.kv.pools = jax.tree.map(
+                    lambda a, s: jax.device_put(
+                        a, jax.sharding.NamedSharding(mesh, s)
+                    ),
+                    self.kv.pools, specs,
+                )
+            self._paged_prefill = jax.jit(make_paged_prefill_step(model))
+            self._paged_decode = jax.jit(make_paged_decode_step(model))
+            self.scheduler = Scheduler(
+                self.kv,
+                max_slots=max_slots,
+                max_len=max_len,
+                prefill_fn=self._run_paged_prefill,
+                decode_fn=self._run_paged_decode,
+                sample_fn=self._sample_rows,
+            )
 
     def _mesh_scope(self):
         if self.mesh is None:
             return contextlib.nullcontext()
         return sh.use_mesh(self.mesh, fsdp=self.fsdp, mode="serve")
 
-    def _sample(self, logits: jax.Array) -> jax.Array:
-        if self.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)
-        self._key, sub = jax.random.split(self._key)
-        return jax.random.categorical(sub, logits / self.temperature, axis=-1)
+    # ------------------------------------------------------------------
+    # sampling: keyed per (request, token index) — admission order and
+    # batch composition can never change a request's sampled tokens
+    # ------------------------------------------------------------------
+    @functools.cached_property
+    def _sampler(self):
+        def sample(key, rids, steps, logits, temp):
+            def one(rid, step, row):
+                k = jax.random.fold_in(jax.random.fold_in(key, rid), step)
+                return jax.random.categorical(k, row / temp)
 
-    def generate(
-        self, prompts: np.ndarray, n_steps: int
+            return jax.vmap(one)(rids, steps, logits)
+
+        return jax.jit(sample)
+
+    def _sample_rows(
+        self, logits: jax.Array, rids: np.ndarray, steps: np.ndarray
     ) -> np.ndarray:
+        """logits (N, V) -> tokens (N,); greedy at temperature <= 0.
+        Sampling runs on device — only the (N,) token ids cross to host."""
+        if self.temperature <= 0.0:
+            return np.asarray(jnp.argmax(jnp.asarray(logits), axis=-1))
+        out = self._sampler(
+            self._base_key,
+            jnp.asarray(rids, jnp.uint32),
+            jnp.asarray(steps, jnp.uint32),
+            jnp.asarray(logits, jnp.float32),
+            jnp.float32(self.temperature),
+        )
+        return np.asarray(out)
+
+    # ------------------------------------------------------------------
+    # paged request API
+    # ------------------------------------------------------------------
+    def _positions(self, pos2d: jax.Array) -> jax.Array:
+        if self.cfg.mrope_sections:
+            return jnp.broadcast_to(pos2d, (3,) + pos2d.shape)
+        return pos2d
+
+    def _run_paged_prefill(self, tokens, positions, tables, slots, wpos, fresh):
+        with self._mesh_scope():
+            logits, self.kv.pools = self._paged_prefill(
+                self.params,
+                jnp.asarray(tokens),
+                self._positions(jnp.asarray(positions)),
+                self.kv.pools,
+                jnp.asarray(tables),
+                jnp.asarray(slots),
+                jnp.asarray(wpos),
+                jnp.asarray(fresh),
+            )
+        return logits
+
+    def _run_paged_decode(self, tokens, positions, tables, slots, wpos, fresh):
+        with self._mesh_scope():
+            logits, self.kv.pools = self._paged_decode(
+                self.params,
+                jnp.asarray(tokens),
+                self._positions(jnp.asarray(positions)),
+                self.kv.pools,
+                jnp.asarray(tables),
+                jnp.asarray(slots),
+                jnp.asarray(wpos),
+                jnp.asarray(fresh),
+            )
+        return logits
+
+    def submit(
+        self,
+        prompt: np.ndarray,
+        *,
+        max_new_tokens: int,
+        eos_id: Optional[int] = None,
+    ) -> int:
+        """Enqueue one request; returns its id (key into run_until_drained)."""
+        if not self.paged:
+            raise RuntimeError("request-level API requires the paged engine")
+        return self.scheduler.submit(
+            prompt, max_new_tokens=max_new_tokens, eos_id=eos_id
+        )
+
+    def run_until_drained(self) -> Dict[int, np.ndarray]:
+        """Step the scheduler until every submitted request completes."""
+        if not self.paged:
+            raise RuntimeError("request-level API requires the paged engine")
+        return self.scheduler.run_until_drained()
+
+    # ------------------------------------------------------------------
+    # batch API (thin wrapper over the scheduler when paged)
+    # ------------------------------------------------------------------
+    def generate(self, prompts: np.ndarray, n_steps: int) -> np.ndarray:
         """prompts (B, S) int32 -> generated tokens (B, n_steps)."""
+        if self.paged:
+            rids = [
+                self.submit(np.asarray(p, np.int32), max_new_tokens=n_steps)
+                for p in prompts
+            ]
+            done = self.run_until_drained()
+            return np.stack([done[r] for r in rids], axis=0)
+        return self._generate_dense(prompts, n_steps)
+
+    def _generate_dense(self, prompts: np.ndarray, n_steps: int) -> np.ndarray:
         b, s = prompts.shape
         batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
         if self.cfg.mrope_sections:
             pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
             batch["positions"] = jnp.broadcast_to(pos, (3, b, s))
+        rows = np.arange(b)
         with self._mesh_scope():
             logits, cache = self._prefill(self.params, batch)
             out = []
-            tok = self._sample(logits)[:, None]
+            tok = self._sample_rows(logits, rows, np.zeros(b))[:, None]
             for i in range(n_steps):
-                out.append(np.asarray(tok)[:, 0])
+                out.append(tok[:, 0])
                 pos = jnp.full((b, 1), s + i, jnp.int32)
                 if self.cfg.mrope_sections:
                     pos = jnp.full((3, b, 1), s + i, jnp.int32)
-                logits, cache = self._decode(self.params, tok, pos, cache)
-                tok = self._sample(logits)[:, None]
+                logits, cache = self._decode(
+                    self.params, jnp.asarray(tok, jnp.int32), pos, cache
+                )
+                tok = self._sample_rows(logits, rows, np.full(b, i + 1))[:, None]
         return np.stack(out, axis=1)

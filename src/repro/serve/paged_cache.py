@@ -1,0 +1,160 @@
+"""Block-paged KV cache: host-side free-list allocator + per-request block
+tables over the device pools built by `Model.init_paged_cache`.
+
+Layout (DESIGN.md §10): per attention layer one `(num_blocks+1, block_size,
+Hkv, Dh)` pool for K and V plus a `(num_blocks+1, block_size)` position
+plane. Device page 0 is the *null page*: pad-token and inactive-slot writes
+land there with the `CACHE_EMPTY_POS` sentinel, so gather-reads mask them to
+exactly-zero attention weight. Allocator page `a` maps to device page
+`a + 1`.
+
+Split of responsibilities:
+  BlockAllocator  pure free-list over allocatable page ids (hypothesis-tested
+                  invariant: free + allocated always sums to the pool size)
+  PagedKVCache    block tables + lazy page allocation + admission-reservation
+                  accounting + the flat write-slot / block-table arrays the
+                  jitted steps consume; owns the device pool pytree
+
+A request at length `len` holds exactly `ceil(len / block_size)` pages —
+never `max_len` — which is the whole point vs the fixed-slot ring cache.
+Admission reserves the request's worst-case page count up front (scheduler
+policy), so lazy per-step allocation can never deadlock mid-flight.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+
+class BlockAllocator:
+    """LIFO free-list over `num_blocks` page ids [0, num_blocks)."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks <= 0:
+            raise ValueError(f"need at least one block, got {num_blocks}")
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._allocated: set = set()
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return len(self._allocated)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("KV pool exhausted (admission should prevent this)")
+        b = self._free.pop()
+        self._allocated.add(b)
+        return b
+
+    def free(self, blocks) -> None:
+        for b in blocks:
+            if b not in self._allocated:
+                raise ValueError(f"double-free / foreign block {b}")
+            self._allocated.discard(b)
+            self._free.append(b)
+
+
+class PagedKVCache:
+    """Block tables + device pools for one serving engine instance."""
+
+    def __init__(
+        self,
+        model: Any,
+        *,
+        num_blocks: int,
+        block_size: int,
+        dtype=jnp.bfloat16,
+    ):
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.allocator = BlockAllocator(num_blocks)
+        self.pools = model.init_paged_cache(num_blocks, block_size, dtype)
+        self._tables: Dict[int, List[int]] = {}
+        self._reserved: Dict[int, int] = {}
+        self._fresh: List[int] = []  # device pages allocated since last drain
+
+    # -- admission accounting ------------------------------------------------
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return math.ceil(n_tokens / self.block_size)
+
+    @property
+    def free_blocks(self) -> int:
+        return self.allocator.free_count
+
+    @property
+    def reserved_blocks(self) -> int:
+        """Pages promised to admitted requests but not yet lazily allocated."""
+        return sum(self._reserved.values())
+
+    def can_admit(self, kv_len: int) -> bool:
+        return self.free_blocks - self.reserved_blocks >= self.blocks_for(kv_len)
+
+    def admit(self, rid: int, kv_len: int) -> None:
+        if not self.can_admit(kv_len):
+            raise RuntimeError(f"admitting request {rid} would oversubscribe the pool")
+        if rid in self._tables:
+            raise ValueError(f"request {rid} already admitted")
+        self._tables[rid] = []
+        self._reserved[rid] = self.blocks_for(kv_len)
+
+    def release(self, rid: int) -> None:
+        self.allocator.free(self._tables.pop(rid))
+        self._reserved.pop(rid, None)
+
+    def blocks_held(self, rid: int) -> int:
+        return len(self._tables[rid])
+
+    # -- slot / table arrays for the jitted steps ----------------------------
+
+    def write_slots(self, rid: int, start_pos: int, n: int) -> np.ndarray:
+        """Flat device slot ids for positions [start_pos, start_pos + n),
+        allocating pages lazily as positions cross page boundaries."""
+        table = self._tables[rid]
+        bs = self.block_size
+        out = np.empty(n, np.int32)
+        for i, p in enumerate(range(start_pos, start_pos + n)):
+            bi = p // bs
+            while len(table) <= bi:
+                table.append(self.allocator.alloc())
+                self._fresh.append(table[-1] + 1)
+                self._reserved[rid] = max(0, self._reserved[rid] - 1)
+            out[i] = (table[bi] + 1) * bs + p % bs
+        return out
+
+    def drain_fresh(self, pad_to: int) -> np.ndarray:
+        """Device pages allocated since the last drain, null-page-padded to a
+        fixed length. The jitted step scrubs these pages' position plane
+        before writing, so a page recycled from an evicted request never
+        leaks its old tenant's entries (pages are not zeroed on free)."""
+        fresh, self._fresh = self._fresh, []
+        if len(fresh) > pad_to:
+            raise ValueError(f"{len(fresh)} fresh pages > pad_to={pad_to}")
+        row = np.zeros(pad_to, np.int32)
+        row[: len(fresh)] = fresh
+        return row
+
+    def null_slots(self, offsets) -> np.ndarray:
+        """Null-page slots for pad tokens (distinct within one page span)."""
+        return (np.asarray(offsets, np.int64) % self.block_size).astype(np.int32)
+
+    def block_table_row(self, rid: Optional[int], max_blocks: int) -> np.ndarray:
+        """(max_blocks,) device page ids, null-page-padded; all-null when the
+        slot is inactive (rid None)."""
+        row = np.zeros(max_blocks, np.int32)
+        if rid is not None:
+            table = self._tables[rid]
+            if len(table) > max_blocks:
+                raise ValueError(
+                    f"request {rid} holds {len(table)} pages > max_blocks={max_blocks}"
+                )
+            row[: len(table)] = np.asarray(table, np.int32) + 1
+        return row

@@ -1,0 +1,242 @@
+"""Continuous-batching scheduler over the block-paged KV cache.
+
+Host-side control loop (DESIGN.md §10): a FIFO request queue feeds a fixed
+set of `max_slots` decode slots. Between decode steps the scheduler admits
+queued requests into free slots whenever the pool has enough unreserved
+pages for the request's worst case (prompt + max_new_tokens - 1 KV
+entries), prefills them one at a time (prompt padded to a page multiple —
+at most `max_blocks` distinct jit shapes), and evicts finished requests
+(EOS or length cap), returning their pages to the free list immediately so
+the next queued request can take the slot.
+
+The decode step itself stays a fixed-shape jitted function over all
+`max_slots` slots: inactive slots feed token 0 at position 0, write to the
+null page, and their logits are ignored — the standard
+continuous-batching-on-XLA compromise, now without per-request max_len
+padding.
+
+Sampling is per-request: `sample_fn(logits, rids, steps)` keys on
+(request id, token index) only, so admission order and batch composition
+can never change a request's sampled tokens.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.models.layers import CACHE_EMPTY_POS
+from repro.serve.paged_cache import PagedKVCache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int32
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    peak_blocks: int = 0
+
+    @property
+    def next_pos(self) -> int:
+        return len(self.prompt) + len(self.out)
+
+
+class Scheduler:
+    """Request queue + admission/eviction around jitted prefill/decode fns.
+
+    prefill_fn(tokens (1,Sp), positions (1,Sp), block_tables (1,MB),
+               write_slots (1,Sp), write_pos (1,Sp), fresh (Sp/bs,))
+               -> logits (1, Sp, V)
+    decode_fn(tokens (M,1), positions (M,1), block_tables (M,MB),
+              write_slots (M,1), write_pos (M,1), fresh (M,)) -> logits (M, V)
+    sample_fn(logits (N,V) on device, rids (N,), steps (N,)) -> np tokens (N,)
+
+    Logits stay on device end-to-end; only sampled token ids cross to host.
+    """
+
+    def __init__(
+        self,
+        cache: PagedKVCache,
+        *,
+        max_slots: int,
+        max_len: int,
+        prefill_fn: Callable,
+        decode_fn: Callable,
+        sample_fn: Callable,
+    ):
+        self.cache = cache
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.max_blocks = math.ceil(max_len / cache.block_size)
+        self._prefill = prefill_fn
+        self._decode = decode_fn
+        self._sample = sample_fn
+        self.queue: collections.deque = collections.deque()
+        self.slots: List[Optional[Request]] = [None] * max_slots
+        self.results: Dict[int, np.ndarray] = {}
+        self.request_peaks: Dict[int, int] = {}  # rid -> peak pages held
+        self._next_rid = 0
+        # occupancy / padding-waste accounting (benchmarks/run.py serving_paged)
+        self._stats = {
+            "decode_steps": 0, "active_slot_steps": 0,
+            "paged_block_steps": 0, "dense_block_steps": 0, "peak_blocks": 0,
+        }
+
+    # ------------------------------------------------------------------
+    # request API
+    # ------------------------------------------------------------------
+    def submit(
+        self,
+        prompt: np.ndarray,
+        *,
+        max_new_tokens: int,
+        eos_id: Optional[int] = None,
+    ) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) < 1:
+            raise ValueError("prompt must contain at least one token")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        # KV footprint: prompt + every fed-back token except the last sample
+        kv_len = len(prompt) + max_new_tokens - 1
+        if kv_len > self.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds max_len={self.max_len}"
+            )
+        if self.cache.blocks_for(kv_len) > self.cache.num_blocks:
+            # would never admit, even against an empty pool — reject here
+            # rather than spinning forever in run_until_drained
+            raise ValueError(
+                f"request needs {self.cache.blocks_for(kv_len)} pages but the "
+                f"pool only has {self.cache.num_blocks}"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, prompt, max_new_tokens, eos_id))
+        return rid
+
+    def run_until_drained(self) -> Dict[int, np.ndarray]:
+        while self.queue or any(r is not None for r in self.slots):
+            self.step()
+        out, self.results = self.results, {}
+        return out
+
+    # ------------------------------------------------------------------
+    # one scheduling round: admission -> prefill -> batched decode
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        self._admit()
+        self._decode_active()
+
+    def _kv_len(self, r: Request) -> int:
+        return len(r.prompt) + r.max_new_tokens - 1
+
+    def _admit(self) -> None:
+        for slot in range(self.max_slots):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            r = self.queue[0]
+            if not self.cache.can_admit(self._kv_len(r)):
+                break  # FIFO: don't let short requests starve the head
+            self.queue.popleft()
+            self.cache.admit(r.rid, self._kv_len(r))
+            self.slots[slot] = r
+            self._prefill_request(r)
+            if self._finished(r):
+                self._evict(slot)
+
+    def _prefill_request(self, r: Request) -> None:
+        bs = self.cache.block_size
+        p = len(r.prompt)
+        sp = math.ceil(p / bs) * bs
+        tokens = np.zeros((1, sp), np.int32)
+        tokens[0, :p] = r.prompt
+        positions = np.arange(sp, dtype=np.int32)[None]
+        write_pos = np.full((1, sp), CACHE_EMPTY_POS, np.int32)
+        write_pos[0, :p] = np.arange(p, dtype=np.int32)
+        write_slots = np.empty((1, sp), np.int32)
+        write_slots[0, :p] = self.cache.write_slots(r.rid, 0, p)
+        write_slots[0, p:] = self.cache.null_slots(np.arange(p, sp))
+        fresh = self.cache.drain_fresh(sp // bs)
+        table = self.cache.block_table_row(r.rid, self.max_blocks)[None]
+        logits = self._prefill(
+            tokens, positions, table, write_slots, write_pos, fresh
+        )
+        # slice the last real token's row on device — only (1, V) leaves it
+        tok = self._sample(logits[:, p - 1, :], np.array([r.rid]), np.array([0]))
+        r.out.append(int(tok[0]))
+        r.peak_blocks = max(r.peak_blocks, self.cache.blocks_held(r.rid))
+
+    def _decode_active(self) -> None:
+        active = [(i, r) for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return
+        m, mb = self.max_slots, self.max_blocks
+        tokens = np.zeros((m, 1), np.int32)
+        positions = np.zeros((m, 1), np.int32)
+        write_pos = np.full((m, 1), CACHE_EMPTY_POS, np.int32)
+        write_slots = np.zeros((m, 1), np.int32)  # null page, offset 0
+        tables = np.zeros((m, mb), np.int32)
+        rids = np.zeros(m, np.int64)
+        steps = np.zeros(m, np.int64)
+        for i, r in active:
+            pos = r.next_pos - 1  # feed back the last sampled token
+            tokens[i, 0] = r.out[-1]
+            positions[i, 0] = pos
+            write_pos[i, 0] = pos
+            write_slots[i, 0] = self.cache.write_slots(r.rid, pos, 1)[0]
+            tables[i] = self.cache.block_table_row(r.rid, mb)
+            rids[i] = r.rid
+            steps[i] = len(r.out)
+        fresh = self.cache.drain_fresh(m)
+        logits = self._decode(
+            tokens, positions, tables, write_slots, write_pos, fresh
+        )
+        toks = self._sample(logits, rids, steps)
+        for i, r in active:
+            r.out.append(int(toks[i]))
+            r.peak_blocks = max(r.peak_blocks, self.cache.blocks_held(r.rid))
+
+        st = self._stats
+        st["decode_steps"] += 1
+        st["active_slot_steps"] += len(active)
+        used = self.cache.allocator.used_count
+        st["paged_block_steps"] += used
+        st["dense_block_steps"] += len(active) * self.max_blocks
+        st["peak_blocks"] = max(st["peak_blocks"], used)
+
+        for i, r in active:
+            if self._finished(r):
+                self._evict(i)
+
+    def _finished(self, r: Request) -> bool:
+        return len(r.out) >= r.max_new_tokens or (
+            r.eos_id is not None and r.out and r.out[-1] == r.eos_id
+        )
+
+    def _evict(self, slot: int) -> None:
+        r = self.slots[slot]
+        self.results[r.rid] = np.asarray(r.out, np.int32)
+        self.request_peaks[r.rid] = r.peak_blocks
+        self.cache.release(r.rid)
+        self.slots[slot] = None
+
+    # ------------------------------------------------------------------
+    # occupancy / padding-waste report
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        st = dict(self._stats)
+        steps = max(1, st["decode_steps"])
+        st["mean_occupancy"] = st["active_slot_steps"] / (steps * self.max_slots)
+        st["mean_blocks"] = st["paged_block_steps"] / steps
+        dense = max(1, st["dense_block_steps"])
+        # fraction of block-steps a max_len ring cache would have held that
+        # the paged pool never allocated
+        st["padding_waste_saved"] = 1.0 - st["paged_block_steps"] / dense
+        return st

@@ -1,0 +1,196 @@
+"""Property-based tests for the block-paged KV cache (DESIGN.md §10): the
+free-list/block-table bookkeeping never leaks pages under arbitrary
+admit/append/evict interleavings, and a gather-read through block tables
+returns exactly the KV the dense ring cache holds for the same token stream."""
+import math
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+pytest.importorskip("hypothesis", reason="install the [test] extra")
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import (
+    CACHE_EMPTY_POS,
+    dequantize_bf8_jnp,
+    init_kv_cache,
+    init_paged_kv_cache,
+    paged_gather_kv,
+    paged_update_cache,
+    update_cache,
+)
+from repro.serve.paged_cache import BlockAllocator, PagedKVCache
+
+
+class _PoolStub:
+    """Model stand-in: bookkeeping tests don't need device pools."""
+
+    def init_paged_cache(self, num_blocks, block_size, dtype=jnp.bfloat16):
+        return {}
+
+
+# ---------------------------------------------------------------------------
+# free-list / block-table invariants
+# ---------------------------------------------------------------------------
+
+# op stream: (kind, arg) — admit a request, append tokens to a live request,
+# or evict a live request; args pick targets modulo the live set
+_OPS = st.lists(
+    st.tuples(st.sampled_from(["admit", "append", "evict"]),
+              st.integers(0, 7), st.integers(1, 9)),
+    min_size=1, max_size=60,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=_OPS, num_blocks=st.integers(4, 24), block_size=st.integers(1, 8))
+def test_random_admit_evict_append_never_leaks_blocks(
+    ops, num_blocks, block_size
+):
+    cache = PagedKVCache(
+        _PoolStub(), num_blocks=num_blocks, block_size=block_size
+    )
+    live = {}  # rid -> (kv_len budget, tokens written)
+    next_rid = 0
+    for kind, pick, n in ops:
+        if kind == "admit":
+            kv_len = min(n * block_size, num_blocks * block_size)
+            if cache.can_admit(kv_len):
+                cache.admit(next_rid, kv_len)
+                live[next_rid] = [kv_len, 0]
+                next_rid += 1
+        elif kind == "append" and live:
+            rid = sorted(live)[pick % len(live)]
+            budget, written = live[rid]
+            take = min(n, budget - written)
+            if take > 0:
+                slots = cache.write_slots(rid, written, take)
+                assert len(set(slots.tolist())) == take  # no slot aliasing
+                assert (slots >= block_size).all()  # never the null page
+                live[rid][1] += take
+        elif kind == "evict" and live:
+            rid = sorted(live)[pick % len(live)]
+            cache.release(rid)
+            del live[rid]
+
+        # the leak invariant: free + allocated always sums to the pool size
+        alloc = cache.allocator
+        assert alloc.free_count + alloc.used_count == num_blocks
+        held = sum(cache.blocks_held(rid) for rid in live)
+        assert held == alloc.used_count
+        # a live request holds exactly the pages its written length needs
+        for rid, (_, written) in live.items():
+            assert cache.blocks_held(rid) == math.ceil(written / block_size)
+        # reservations never oversubscribe the pool
+        assert cache.reserved_blocks <= alloc.free_count
+
+    for rid in list(live):
+        cache.release(rid)
+    assert cache.allocator.free_count == num_blocks
+    assert cache.reserved_blocks == 0
+
+
+def test_allocator_rejects_double_free_and_exhaustion():
+    a = BlockAllocator(2)
+    b0, b1 = a.alloc(), a.alloc()
+    with pytest.raises(RuntimeError, match="exhausted"):
+        a.alloc()
+    a.free([b0])
+    with pytest.raises(ValueError, match="double-free"):
+        a.free([b0])
+    a.free([b1])
+    assert a.free_count == 2
+
+
+def test_admission_reservation_blocks_oversubscription():
+    cache = PagedKVCache(_PoolStub(), num_blocks=4, block_size=2)
+    cache.admit(0, 6)  # reserves 3 pages before any are allocated
+    assert not cache.can_admit(4)  # only 1 unreserved page left
+    assert cache.can_admit(2)
+    with pytest.raises(RuntimeError, match="oversubscribe"):
+        cache.admit(1, 8)
+
+
+# ---------------------------------------------------------------------------
+# gather-read == dense ring-cache read
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_tokens=st.integers(1, 40),
+    block_size=st.sampled_from([2, 4, 8]),
+    quant=st.sampled_from(["none", "bf8"]),
+    seed=st.integers(0, 2**16),
+)
+def test_gather_read_matches_dense_ring_cache(n_tokens, block_size, quant, seed):
+    """Stream the same tokens into a dense ring cache and a paged pool; the
+    gathered KV must equal the ring KV slot-for-slot (same values, same
+    position order, empties masked by the sentinel)."""
+    hkv, dh = 2, 4
+    rng = np.random.default_rng(seed)
+    ks = rng.standard_normal((1, n_tokens, hkv, dh)).astype(np.float32)
+    vs = rng.standard_normal((1, n_tokens, hkv, dh)).astype(np.float32)
+
+    ring = init_kv_cache(1, n_tokens, hkv, dh, jnp.float32, quant=quant)
+    num_blocks = math.ceil(n_tokens / block_size) + 1
+    pool = init_paged_kv_cache(
+        num_blocks + 1, block_size, hkv, dh, jnp.float32, quant=quant
+    )
+    cache = PagedKVCache(_PoolStub(), num_blocks=num_blocks, block_size=block_size)
+    cache.admit(0, n_tokens)
+
+    # append in randomly-sized chunks, as a serving request would
+    i = 0
+    while i < n_tokens:
+        s = int(rng.integers(1, n_tokens - i + 1))
+        kc = jnp.asarray(ks[:, i : i + s])
+        vc = jnp.asarray(vs[:, i : i + s])
+        pos = jnp.arange(i, i + s, dtype=jnp.int32)
+        ring = update_cache(ring, kc, vc, pos)
+        slots = cache.write_slots(0, i, s)[None]
+        fresh = jnp.asarray(cache.drain_fresh(num_blocks))
+        pool = paged_update_cache(pool, kc, vc, pos[None], slots, fresh)
+        i += s
+
+    mb = math.ceil(n_tokens / block_size)
+    table = cache.block_table_row(0, mb)[None]
+    kg, vg, pg = paged_gather_kv(pool, jnp.asarray(table))
+
+    rk, rv = ring["k"], ring["v"]
+    if quant == "bf8":
+        rk, rv = dequantize_bf8_jnp(rk), dequantize_bf8_jnp(rv)
+    # gathered index i is position i (table order is append order)
+    np.testing.assert_array_equal(
+        np.asarray(pg)[0, :n_tokens], np.asarray(ring["pos"])[:n_tokens]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(kg, np.float32)[0, :n_tokens],
+        np.asarray(rk, np.float32)[0, :n_tokens],
+    )
+    np.testing.assert_array_equal(
+        np.asarray(vg, np.float32)[0, :n_tokens],
+        np.asarray(rv, np.float32)[0, :n_tokens],
+    )
+    # slots past the stream are empty and carry the mask sentinel
+    assert (np.asarray(pg)[0, n_tokens:] == CACHE_EMPTY_POS).all()
+
+
+def test_fresh_page_scrub_hides_evicted_tenant():
+    """A page recycled from an evicted request must not leak its entries:
+    the fresh-page scrub resets the position plane before the new write."""
+    hkv, dh = 1, 2
+    pool = init_paged_kv_cache(3, 2, hkv, dh, jnp.float32)
+    one = jnp.ones((1, 2, hkv, dh), jnp.float32)
+    # old tenant fills device page 1 (flat slots 2, 3)
+    pool = paged_update_cache(
+        pool, one, one, jnp.asarray([[0, 1]]), jnp.asarray([[2, 3]])
+    )
+    # new tenant reuses page 1, writes a single token at slot 2
+    pool = paged_update_cache(
+        pool, one[:, :1], one[:, :1], jnp.asarray([[0]]), jnp.asarray([[2]]),
+        fresh_pages=jnp.asarray([1]),
+    )
+    _, _, pg = paged_gather_kv(pool, jnp.asarray([[1]]))
+    assert np.asarray(pg).tolist() == [[0, CACHE_EMPTY_POS]]
