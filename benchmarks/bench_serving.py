@@ -53,6 +53,7 @@ def bench_paged_serving() -> List[Dict[str, str]]:
             dt / max(1, st["decode_steps"]) * 1e6,
             f"tok_s={n_tok / dt:.1f} occupancy={st['mean_occupancy']:.2f} "
             f"peak_blocks={st['peak_blocks']} "
-            f"waste_saved={st['padding_waste_saved']:.2%}",
+            f"waste_saved={st['padding_waste_saved']:.2%} "
+            f"kvB_per_tok={st['kv_bytes_per_token']:.0f}",
         ))
     return rows

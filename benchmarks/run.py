@@ -14,6 +14,7 @@ from benchmarks import bench_tpu_fused as tf
 from benchmarks.common import emit
 
 ALL = [
+    ("codecs", pt.bench_codecs),
     ("table1", pt.bench_table1),
     ("fig3", pt.bench_fig3),
     ("fig4", pt.bench_fig4),

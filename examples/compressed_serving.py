@@ -63,6 +63,9 @@ def main():
                          "paged scheduler and report occupancy / padding-"
                          "waste stats")
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--kv-quant", default=None, metavar="FMT",
+                    help="quantize the KV cache with any KV-capable codec "
+                         "from repro.core.codecs (bf8/int8/int4/mxfp4/nf4)")
     args = ap.parse_args()
 
     cfg = get_smoke_config("llama3-8b")
@@ -88,7 +91,11 @@ def main():
         lengths = [int(x) for x in rng.integers(8, 49, args.batch)]
         engine = GenerationEngine(model, cparams, max_len=128,
                                   temperature=0.0, mesh=mesh,
-                                  block_size=args.block_size, max_slots=4)
+                                  block_size=args.block_size, max_slots=4,
+                                  kv_quant=args.kv_quant)
+        if args.kv_quant:
+            print(f"KV pools quantized with {args.kv_quant}: "
+                  f"{engine.kv.bytes_per_token():.0f} B/token (all layers)")
         rids = [
             engine.submit(rng.integers(0, cfg.vocab_size, n).astype(np.int32),
                           max_new_tokens=args.steps)
@@ -111,7 +118,9 @@ def main():
 
     prompts = rng.integers(0, cfg.vocab_size, (args.batch, 16)).astype(np.int32)
     engine = GenerationEngine(model, cparams, max_len=128, temperature=0.0,
-                              mesh=mesh)
+                              mesh=mesh, kv_quant=args.kv_quant)
+    if args.kv_quant:
+        print(f"KV cache quantized with {args.kv_quant}")
     t0 = time.perf_counter()
     out = engine.generate(prompts, args.steps)
     dt = time.perf_counter() - t0

@@ -1,16 +1,15 @@
 """Offline model compression (paper Fig. 1, left side).
 
-``compress(w, spec)`` sparsifies (per-group top-|w|), quantizes, and packs a
-2D weight into the DECA storage triplet {codes, mask, scales}. Runs in numpy
+``compress(w, spec)`` sparsifies (per-group top-|w|), then hands the packed
+nonzero values to the format's codec (`core/codecs.py`) for quantization and
+packing into the DECA storage triplet {codes, mask, scales}. Runs in numpy
 on the host — compression is offline in the paper; only *decompression* is
 on the inference critical path.
 
-Number formats:
-  bf8    E5M2 — exactly the high byte of IEEE binary16 (like bf16 is the
-         high half of binary32). Quantize = RNE-truncate fp16 to 8 bits.
-  mxfp4  OCP MX FP4 (E2M1) with a shared E8M0 scale per 32 elements.
-  int8/4 symmetric integer with a per-group bf16 scale.
-  bf16   no quantization (sparsity only).
+All format-specific code (bf8/mxfp4/int8/int4/nf4/bf16 number handling)
+lives on the registered `Codec` objects; this module owns only the
+format-agnostic sparsification and the `CompressedTensor` container. The
+individual quantizers are re-exported from the registry for back-compat.
 """
 from __future__ import annotations
 
@@ -20,10 +19,18 @@ from typing import Optional, Tuple
 import jax
 import numpy as np
 
-from .formats import CompressionSpec
-
-# E2M1 magnitude grid (sign handled separately): code 0..7.
-FP4_GRID = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], dtype=np.float32)
+from repro.core.codecs import (  # noqa: F401  (back-compat re-exports)
+    FP4_GRID,
+    NF4_LUT,
+    dequantize_bf8,
+    dequantize_fp4,
+    get_codec,
+    quantize_bf8,
+    quantize_fp4,
+    _bf16_bits_to_f32,
+    _f32_to_bf16_bits,
+)
+from repro.core.formats import CompressionSpec
 
 
 @jax.tree_util.register_pytree_node_class
@@ -34,7 +41,7 @@ class CompressedTensor:
     codes : (ng, k_cap*bits/8, N) uint8   packed quantized nonzeros
             (bf16 codes are stored as 2 bytes little-endian)
     mask  : (ng, N) uint32 or None        per-group bitmask (bit i = row g*G+i)
-    scales: (ng, N) uint8|uint16 or None  E8M0 (mxfp4) / bf16-bits (int8/4)
+    scales: (ng, N) uint8|uint16 or None  E8M0 (mxfp4) / bf16-bits (int8/4, nf4)
     """
 
     codes: jax.Array
@@ -58,49 +65,6 @@ class CompressedTensor:
         if self.scales is not None:
             total += self.scales.size * self.scales.dtype.itemsize
         return int(total)
-
-
-# ---------------------------------------------------------------------------
-# quantizers (numpy, offline)
-# ---------------------------------------------------------------------------
-
-def quantize_bf8(x: np.ndarray) -> np.ndarray:
-    """f32 -> E5M2 code (uint8), round-to-nearest-even via fp16 bits."""
-    h = x.astype(np.float16).view(np.uint16).astype(np.uint32)
-    lower, upper = h & 0xFF, h >> 8
-    round_up = (lower > 0x80) | ((lower == 0x80) & (upper & 1 == 1))
-    code = upper + round_up
-    # avoid rounding a finite value into inf (exp=31, man=0)
-    overflow = (code & 0x7F) == 0x7C
-    code = np.where(overflow & ((upper & 0x7F) < 0x7C), upper, code)
-    return code.astype(np.uint8)
-
-
-def dequantize_bf8(code: np.ndarray) -> np.ndarray:
-    return (code.astype(np.uint16) << 8).view(np.float16).astype(np.float32)
-
-
-def quantize_fp4(x: np.ndarray) -> np.ndarray:
-    """f32 (already divided by group scale) -> E2M1 code (uint8 in [0,16))."""
-    sign = (x < 0).astype(np.uint8)
-    mag = np.abs(x.astype(np.float32))
-    idx = np.argmin(np.abs(mag[..., None] - FP4_GRID), axis=-1).astype(np.uint8)
-    return (sign << 3) | idx
-
-
-def dequantize_fp4(code: np.ndarray) -> np.ndarray:
-    mag = FP4_GRID[code & 0x7]
-    return np.where(code >> 3 == 1, -mag, mag)
-
-
-def _f32_to_bf16_bits(x: np.ndarray) -> np.ndarray:
-    b = x.astype(np.float32).view(np.uint32)
-    b = b + 0x7FFF + ((b >> 16) & 1)  # RNE
-    return (b >> 16).astype(np.uint16)
-
-
-def _bf16_bits_to_f32(b: np.ndarray) -> np.ndarray:
-    return (b.astype(np.uint32) << 16).view(np.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -147,34 +111,7 @@ def compress(w: np.ndarray, spec: CompressionSpec) -> CompressedTensor:
     else:
         vals = wg  # k_cap == G
 
-    scales = None
-    if spec.quant == "mxfp4":
-        amax = np.abs(vals).max(axis=1)  # (ng, N)
-        e = np.floor(np.log2(np.maximum(amax, 2.0 ** -126)))
-        scale_exp = np.clip(e - 2.0, -127, 127)  # E2M1 emax = 2 (max elem 6.0)
-        scales = (scale_exp + 127).astype(np.uint8)  # E8M0
-        q = vals / (2.0 ** scale_exp)[:, None, :]
-        codes4 = quantize_fp4(q)  # (ng, k_cap, N) in [0,16)
-        codes = (codes4[:, 0::2, :] | (codes4[:, 1::2, :] << 4)).astype(np.uint8)
-    elif spec.quant in ("int8", "int4"):
-        qmax = 127 if spec.quant == "int8" else 7
-        amax = np.abs(vals).max(axis=1)
-        scale = np.maximum(amax / qmax, 1e-12)
-        scales = _f32_to_bf16_bits(scale)  # uint16 bf16-bits
-        scale = _bf16_bits_to_f32(scales)  # use the *stored* scale
-        q = np.clip(np.rint(vals / scale[:, None, :]), -qmax, qmax).astype(np.int32)
-        if spec.quant == "int8":
-            codes = (q & 0xFF).astype(np.uint8)
-        else:
-            u = (q & 0xF).astype(np.uint8)  # two's-complement nibble
-            codes = (u[:, 0::2, :] | (u[:, 1::2, :] << 4)).astype(np.uint8)
-    elif spec.quant == "bf8":
-        codes = quantize_bf8(vals)
-    elif spec.quant == "bf16":
-        b = _f32_to_bf16_bits(vals)  # (ng, k_cap, N) uint16
-        codes = np.stack([b & 0xFF, b >> 8], axis=2).reshape(ng, -1, N).astype(np.uint8)
-    else:  # pragma: no cover
-        raise AssertionError(spec.quant)
+    codes, scales = get_codec(spec.quant).encode(vals)
 
     return CompressedTensor(
         codes=np.ascontiguousarray(codes),

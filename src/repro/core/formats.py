@@ -1,9 +1,15 @@
-"""Compression scheme registry (paper §2.2).
+"""Compression scheme geometry (paper §2.2).
 
 A scheme is (quantization format, unstructured density). The paper evaluates
 Q16 (BF16, sparsity only), Q8 (BF8 = E5M2), and Q4 (MXFP4, group-32 scaled);
 we additionally support INT8/INT4 group-scaled formats (the paper notes Q4
-performance is representative of INT4-with-scales schemes like AWQ).
+performance is representative of INT4-with-scales schemes like AWQ) and NF4.
+
+The format-specific side (bits, scale encoding, encode/decode) lives in the
+codec registry (`core/codecs.py`); this module owns only the *geometry* of a
+scheme — density, group length, packed capacity, and the byte accounting the
+roofline prices from. `CompressionSpec.quant` is a codec name, so any newly
+registered codec parses through `get_spec` with zero changes here.
 
 Storage model (bitmask-based sparse format, paper §2.2):
   - ``codes``   packed nonzero values (exactly ``k_cap`` kept per group of
@@ -21,6 +27,8 @@ import dataclasses
 import math
 from typing import Optional
 
+from repro.core.codecs import Codec, get_codec
+
 GROUP = 32  # sparsity + scale group along K (matches MXFP4's 32-elem groups)
 
 
@@ -28,26 +36,29 @@ GROUP = 32  # sparsity + scale group along K (matches MXFP4's 32-elem groups)
 class CompressionSpec:
     """Static description of a compression scheme."""
 
-    quant: str            # 'bf16' | 'bf8' | 'mxfp4' | 'int8' | 'int4'
+    quant: str            # any registered codec name (core/codecs.py)
     density: float = 1.0  # fraction of nonzeros kept (1.0 = dense)
     group: int = GROUP    # group length along K for sparsity & scales
 
     def __post_init__(self):
-        if self.quant not in _QUANT_BITS:
-            raise ValueError(f"unknown quant format {self.quant!r}")
+        get_codec(self.quant)  # raises ValueError for unregistered formats
         if not (0.0 < self.density <= 1.0):
             raise ValueError(f"density must be in (0, 1], got {self.density}")
         if self.group % 32 != 0:
             raise ValueError("group must be a multiple of 32 (uint32 bitmask)")
 
-    # -- static geometry -------------------------------------------------
+    # -- codec metadata ---------------------------------------------------
+    @property
+    def codec(self) -> Codec:
+        return get_codec(self.quant)
+
     @property
     def bits(self) -> int:
-        return _QUANT_BITS[self.quant]
+        return self.codec.bits
 
     @property
     def has_scale(self) -> bool:
-        return self.quant in ("mxfp4", "int8", "int4")
+        return self.codec.has_scale
 
     @property
     def is_sparse(self) -> bool:
@@ -66,14 +77,13 @@ class CompressionSpec:
         d = int(round(self.density * 100))
         return f"{self.quant}_{d}"
 
-    # -- roofline accounting ---------------------------------------------
+    # -- roofline accounting (all format constants come from the codec) ---
     def bits_per_element(self) -> float:
         """Average stored bits per *original* matrix element."""
         bits = self.bits * self.k_cap / self.group
         if self.is_sparse:
             bits += 1.0  # bitmask
-        if self.has_scale:
-            bits += _SCALE_BITS[self.quant] / self.group
+        bits += self.codec.scale_bits / self.group
         return bits
 
     def compression_factor(self) -> float:
@@ -85,12 +95,9 @@ class CompressionSpec:
         ng = math.ceil(k / self.group)
         code_bytes = ng * self.k_cap * n * self.bits // 8
         mask_bytes = ng * 4 * n if self.is_sparse else 0
-        scale_bytes = ng * n * _SCALE_BITS[self.quant] // 8 if self.has_scale else 0
+        scale_bytes = ng * n * self.codec.scale_bits // 8
         return code_bytes + mask_bytes + scale_bytes
 
-
-_QUANT_BITS = {"bf16": 16, "bf8": 8, "mxfp4": 4, "int8": 8, "int4": 4}
-_SCALE_BITS = {"mxfp4": 8, "int8": 16, "int4": 16, "bf16": 0, "bf8": 0}
 
 # The paper's evaluated scheme grid (§8 "Compression Schemes").
 PAPER_SCHEMES = [

@@ -26,6 +26,7 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Tuple
 
+from .codecs import get_codec
 from .formats import CompressionSpec
 
 TILE_ELEMS = 512  # one AMX weight tile = 16 rows x 32 cols
@@ -80,7 +81,11 @@ TPU_V5E = HardwareProfile(
 # ---------------------------------------------------------------------------
 
 def bytes_per_tile(spec: CompressionSpec) -> float:
-    """Compressed bytes fetched from memory per 512-element weight tile."""
+    """Compressed bytes fetched from memory per 512-element weight tile.
+
+    `bits_per_element` is codec-metadata-driven (value bits + bitmask +
+    scale bits all come from the registered codec), so a newly registered
+    format is priced on the 3D roofline with no changes here."""
     return TILE_ELEMS * spec.bits_per_element() / 8.0
 
 
@@ -102,7 +107,7 @@ def software_vops_per_tile(spec: CompressionSpec) -> float:
     load_ops = (32 * d * q / 8.0) / 64.0          # nonzero bytes / 64B line
     mask_ops = 1.0 if spec.is_sparse else 0.0     # bitmask load + popcnt path
     expand_ops = 3.0 if spec.is_sparse else 0.0   # expand + permute + blend
-    if spec.quant == "bf16":
+    if get_codec(spec.quant).is_identity:         # no dequant stage at all
         dequant_ops = 0.0
     elif spec.bits >= 8:
         dequant_ops = 3.0                          # cvt + shift + pack
@@ -140,7 +145,7 @@ def deca_bubbles_per_vop(spec: CompressionSpec, w: int, l: int) -> float:
         lq = 2 * l
     else:
         lq = 4 * l
-    if spec.quant == "bf16":
+    if get_codec(spec.quant).is_identity:
         lq = 4 * l  # no dequantization needed: LUT stage is bypassed
     if lq >= w:
         return 0.0

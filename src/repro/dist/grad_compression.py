@@ -2,13 +2,15 @@
 
 `make_compressed_allreduce(mesh, grads_like)` returns an
 `allreduce(grads, err) -> (avg_grads, new_err)` that quantizes the
-error-compensated gradient (g + err) per-group to int8 (symmetric, f32
-scale per group) or BF8 (E5M2 — the paper's quantization substrate reused
-for collectives), sums the dequantized payload across every mesh axis with
-`psum`, and keeps the local quantization residual as the next step's error
-feedback. The residual guarantees the *transmitted* sequence telescopes:
-sum_t sent_t = sum_t g_t - err_T, so quantization bias does not accumulate
-over training (Karimireddy et al., "Error Feedback Fixes SignSGD").
+error-compensated gradient (g + err) per-group with any KV-capable codec
+from the registry (`repro.core.codecs`) — int8 (symmetric, per-group scale)
+and BF8 (E5M2, the paper's quantization substrate reused for collectives)
+are the canonical choices; mxfp4/int4/nf4 work the same way — sums the
+dequantized payload across every mesh axis with `psum`, and keeps the local
+quantization residual as the next step's error feedback. The residual
+guarantees the *transmitted* sequence telescopes: sum_t sent_t = sum_t g_t
+- err_T, so quantization bias does not accumulate over training
+(Karimireddy et al., "Error Feedback Fixes SignSGD").
 
 The reduction runs inside shard_map with replicated specs: each device
 holds its own local gradient replica (SPMD data parallelism), quantization
@@ -24,11 +26,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import codecs
+
 try:  # moved between jax versions
     from jax.experimental.shard_map import shard_map
 except ImportError:  # pragma: no cover — newer jax: top-level function
     shard_map = jax.shard_map  # type: ignore[attr-defined]
 
+# canonical methods; any name in codecs.kv_codec_names() is accepted
 METHODS = ("int8", "bf8")
 
 
@@ -36,21 +41,15 @@ METHODS = ("int8", "bf8")
 # per-leaf quantize / dequantize (local, no communication)
 # ---------------------------------------------------------------------------
 
-def _int8_roundtrip(x: jax.Array, group: int) -> jax.Array:
-    """x -> dequantize(quantize_int8(x)): what the wire would carry."""
-    flat = x.reshape(-1)
+def _codec_roundtrip(x: jax.Array, codec: codecs.Codec, group: int) -> jax.Array:
+    """x -> dequantize(quantize(x)): what the wire would carry. Grouped
+    along a flat view; scaled codecs get one scale per `group` elements."""
+    flat = x.reshape(-1).astype(jnp.float32)
     pad = (-flat.size) % group
     g = jnp.pad(flat, (0, pad)).reshape(-1, group)
-    scale = jnp.maximum(jnp.max(jnp.abs(g), axis=1, keepdims=True) / 127.0, 1e-12)
-    q = jnp.clip(jnp.round(g / scale), -127, 127)
-    deq = (q * scale).reshape(-1)
+    codes, scales = codec.kv_encode(g)
+    deq = codec.kv_decode(codes, scales).astype(jnp.float32).reshape(-1)
     return deq[: flat.size].reshape(x.shape)
-
-
-def _bf8_roundtrip(x: jax.Array) -> jax.Array:
-    from repro.models.layers import dequantize_bf8_jnp, quantize_bf8_jnp
-
-    return dequantize_bf8_jnp(quantize_bf8_jnp(x)).astype(jnp.float32)
 
 
 def make_compressed_allreduce(
@@ -62,14 +61,22 @@ def make_compressed_allreduce(
 ) -> Tuple[Callable, Callable]:
     """Build the compressed gradient all-reduce for `mesh`.
 
+    `method` names any KV-capable registered codec (see
+    `repro.core.codecs.kv_codec_names()`); unknown or non-quantizing
+    formats raise ValueError.
+
     Returns (allreduce, init_err):
       init_err(grads)       -> zero f32 residual tree
       allreduce(grads, err) -> (avg_grads, new_err); avg_grads is the mean
                                over all mesh devices of the quantized
                                payloads, new_err the local residual.
     """
-    if method not in METHODS:
-        raise ValueError(f"method must be one of {METHODS}, got {method!r}")
+    codec = codecs.get_codec(method)  # ValueError on unknown formats
+    if not codec.kv_capable:
+        raise ValueError(
+            f"method {method!r} has no runtime quantizer; choose one of "
+            f"{codecs.kv_codec_names()}"
+        )
     axes = tuple(mesh.axis_names)
     n_dev = int(np.prod([mesh.shape[a] for a in axes]))
 
@@ -78,10 +85,7 @@ def make_compressed_allreduce(
 
     def _leaf(g: jax.Array, e: jax.Array):
         compensated = g.astype(jnp.float32) + e
-        if method == "int8":
-            sent = _int8_roundtrip(compensated, group)
-        else:
-            sent = _bf8_roundtrip(compensated)
+        sent = _codec_roundtrip(compensated, codec, group)
         avg = jax.lax.psum(sent, axes) / n_dev
         return avg, compensated - sent
 

@@ -293,7 +293,10 @@ def opt_spec_tree(
 # input / activation-state specs
 # ---------------------------------------------------------------------------
 
-_CACHE_LEAVES = ("k", "v", "pos", "length", "conv", "h", "kp", "vp", "ppos")
+_CACHE_LEAVES = (
+    "k", "v", "pos", "length", "conv", "h", "kp", "vp", "ppos",
+    "k_scale", "v_scale", "ks", "vs",  # quantized-KV per-(slot, head) scales
+)
 
 
 def data_spec_tree(tree: Any, ctx: Any, *, scan_stacked: bool = False) -> Any:
@@ -320,12 +323,15 @@ def data_spec_tree(tree: Any, ctx: Any, *, scan_stacked: bool = False) -> Any:
             i = 1
             if i >= nd:
                 return P(*entries)
-        if name in ("kp", "vp"):
-            # paged KV pool (..., NB, bsize, Hkv, Dh): pages replicated over
-            # the data axis (every data shard reads any request's blocks),
-            # KV heads over 'model'
+        if name in ("kp", "vp", "ks", "vs"):
+            # paged KV pool (..., NB, bsize, Hkv, Dh) and its scale planes
+            # (..., NB, bsize, Hkv): pages replicated over the data axis
+            # (every data shard reads any request's blocks), KV heads over
+            # 'model' — the head dim is last for scales, second-to-last for
+            # code pools
+            head_dim = nd - 1 if name in ("ks", "vs") else nd - 2
             for j in range(i, nd):
-                if j == nd - 2:
+                if j == head_dim:
                     entries.append(
                         _resolve_dim(shape[j], _ROLE_AXES["model"], ctx, used)
                     )
@@ -338,7 +344,11 @@ def data_spec_tree(tree: Any, ctx: Any, *, scan_stacked: bool = False) -> Any:
         entries.append(_resolve_dim(shape[i], _ROLE_AXES["batch"], ctx, used))
         i += 1
         for j in range(i, nd):
-            if name in ("k", "v") and j == nd - 2:  # KV heads over 'model'
+            # KV heads over 'model': dim -2 for code buffers, -1 for the
+            # ring cache's quantized-KV scale planes
+            if (name in ("k", "v") and j == nd - 2) or (
+                name in ("k_scale", "v_scale") and j == nd - 1
+            ):
                 entries.append(
                     _resolve_dim(shape[j], _ROLE_AXES["model"], ctx, used)
                 )
@@ -364,6 +374,7 @@ _ACT_ROLES: Dict[str, Tuple[str, ...]] = {
     "edf_use": ("expert", "none", "none"),  # expert weight at point of use
     "efd_use": ("expert", "none", "none"),  # (FSDP shard all-gathered)
     "pkv": ("none", "none", "model", "none"),  # paged KV pool (NB, bs, Hkv, Dh)
+    "pkvs": ("none", "none", "model"),  # paged KV scale plane (NB, bs, Hkv)
 }
 
 

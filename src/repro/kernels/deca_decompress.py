@@ -27,69 +27,23 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.codecs import get_codec
 from repro.core.compression import CompressedTensor
 from repro.core.formats import CompressionSpec
 
 
 # ---------------------------------------------------------------------------
-# in-kernel decode primitives (pure VPU ops — shifts, masks, selects)
+# in-kernel decode: the registered codec's jnp decode (pure VPU ops —
+# shifts, masks, selects — the same implementation kernels/ref.py uses)
 # ---------------------------------------------------------------------------
-
-def _decode_bf8(codes: jax.Array) -> jax.Array:
-    """uint8 E5M2 -> f32. E5M2 is the high byte of binary16."""
-    bits = codes.astype(jnp.uint16) << 8
-    return jax.lax.bitcast_convert_type(bits, jnp.float16).astype(jnp.float32)
-
-
-def _decode_fp4_mag(nib: jax.Array) -> jax.Array:
-    """E2M1 nibble (sign stripped) -> magnitude, pure ALU (no LUT).
-
-    value = m/2            if e == 0   (subnormal)
-          = (1 + m/2)*2^(e-1) otherwise
-    """
-    e = ((nib >> 1) & 0x3).astype(jnp.float32)
-    m = (nib & 0x1).astype(jnp.float32)
-    normal = (1.0 + 0.5 * m) * jnp.exp2(e - 1.0)
-    return jnp.where(e == 0.0, 0.5 * m, normal)
-
-
-def _decode_fp4(nib: jax.Array) -> jax.Array:
-    mag = _decode_fp4_mag(nib)
-    return jnp.where((nib >> 3) == 1, -mag, mag)
-
-
-def _unpack_nibbles(codes: jax.Array) -> jax.Array:
-    ng, kh, n = codes.shape
-    lo, hi = codes & 0xF, codes >> 4
-    return jnp.stack([lo, hi], axis=2).reshape(ng, kh * 2, n)
-
 
 def decode_values(codes: jax.Array, spec: CompressionSpec) -> jax.Array:
     """(ng, packed, n) uint8 block -> (ng, k_cap, n) f32 values (in-kernel)."""
-    if spec.quant == "bf8":
-        return _decode_bf8(codes)
-    if spec.quant == "bf16":
-        lo = codes[:, 0::2, :].astype(jnp.uint16)
-        hi = codes[:, 1::2, :].astype(jnp.uint16)
-        return jax.lax.bitcast_convert_type(lo | (hi << 8), jnp.bfloat16).astype(
-            jnp.float32
-        )
-    if spec.quant == "mxfp4":
-        return _decode_fp4(_unpack_nibbles(codes))
-    if spec.quant == "int8":
-        return codes.astype(jnp.int8).astype(jnp.float32)
-    if spec.quant == "int4":
-        nib = _unpack_nibbles(codes).astype(jnp.int32)
-        return (nib - 16 * (nib >= 8)).astype(jnp.float32)
-    raise ValueError(spec.quant)
+    return get_codec(spec.quant).decode_values(codes)
 
 
 def decode_scales(scales: jax.Array, spec: CompressionSpec) -> jax.Array:
-    if spec.quant == "mxfp4":  # E8M0
-        return jnp.exp2(scales.astype(jnp.float32) - 127.0)
-    return jax.lax.bitcast_convert_type(
-        scales.astype(jnp.uint16), jnp.bfloat16
-    ).astype(jnp.float32)
+    return get_codec(spec.quant).decode_scales(scales)
 
 
 def decompress_block(
@@ -101,11 +55,13 @@ def decompress_block(
     """Decompress one VMEM block -> (ng*G, n) f32 dense tile.
 
     This is the full DECA pipeline body; shared by the standalone and the
-    fused GeMM kernels.
+    fused GeMM kernels, and format-agnostic: the codec registry supplies
+    the dequantization, so a newly registered format runs here unchanged.
     """
-    vals = decode_values(codes, spec)  # (ng, k_cap, n)
+    codec = get_codec(spec.quant)
+    vals = codec.decode_values(codes)  # (ng, k_cap, n)
     if scales is not None:
-        vals = vals * decode_scales(scales, spec)[:, None, :]
+        vals = vals * codec.decode_scales(scales)[:, None, :]
     ng, _, n = vals.shape
     if mask is None:
         return vals.reshape(ng * spec.group, n)

@@ -1,15 +1,17 @@
 """Pure-jnp oracles for DECA decompression and compressed GeMM.
 
 These mirror the DECA PE pipeline (paper Fig. 11) stage by stage:
-  1. Dequantization  — code -> BF16 value (LUT array in hardware; exact
-                       ALU remaps here),
+  1. Dequantization  — code -> BF16 value (LUT array in hardware; the
+                       registered codec's jnp decode here),
   2. Expansion       — de-sparsification: prefix-sum over the bitmask
                        (POPCNT + parallel-prefix + crossbar in hardware;
                        cumsum + gather here),
   3. Scaling         — per-group scale multiply (group quantization).
 
 Everything is jittable jnp; used as the correctness reference for the
-Pallas kernels and as the portable fallback path.
+Pallas kernels and as the portable fallback path. Stage 1 and the scale
+decode route through `repro.core.codecs`, so this module and the Pallas
+kernels share exactly one decode implementation per format.
 """
 from __future__ import annotations
 
@@ -17,54 +19,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compression import CompressedTensor, FP4_GRID
+from repro.core.codecs import get_codec
+from repro.core.compression import CompressedTensor
 from repro.core.formats import CompressionSpec
-
-_FP4_GRID_J = jnp.asarray(FP4_GRID, dtype=jnp.float32)
 
 
 # ---------------------------------------------------------------------------
-# stage 1: dequantization
+# stage 1: dequantization (delegates to the codec registry)
 # ---------------------------------------------------------------------------
 
 def dequant_codes(codes: jax.Array, spec: CompressionSpec) -> jax.Array:
     """(ng, packed_k, N) uint8 -> (ng, k_cap, N) f32 unquantized values."""
-    if spec.quant == "bf8":
-        bits = codes.astype(jnp.uint16) << 8
-        return jax.lax.bitcast_convert_type(bits, jnp.float16).astype(jnp.float32)
-    if spec.quant == "bf16":
-        lo = codes[:, 0::2, :].astype(jnp.uint16)
-        hi = codes[:, 1::2, :].astype(jnp.uint16)
-        return jax.lax.bitcast_convert_type(lo | (hi << 8), jnp.bfloat16).astype(
-            jnp.float32
-        )
-    if spec.quant == "mxfp4":
-        nib = _unpack_nibbles(codes)
-        mag = jnp.take(_FP4_GRID_J, (nib & 0x7).astype(jnp.int32))
-        return jnp.where(nib >> 3 == 1, -mag, mag)
-    if spec.quant == "int8":
-        return codes.astype(jnp.int8).astype(jnp.float32)
-    if spec.quant == "int4":
-        nib = _unpack_nibbles(codes).astype(jnp.int32)
-        return (nib - 16 * (nib >= 8)).astype(jnp.float32)
-    raise ValueError(spec.quant)
-
-
-def _unpack_nibbles(codes: jax.Array) -> jax.Array:
-    """(ng, k/2, N) -> (ng, k, N), even k = low nibble, odd = high."""
-    ng, kh, n = codes.shape
-    lo, hi = codes & 0xF, codes >> 4
-    return jnp.stack([lo, hi], axis=2).reshape(ng, kh * 2, n)
+    return get_codec(spec.quant).decode_values(codes)
 
 
 def dequant_scales(scales: jax.Array, spec: CompressionSpec) -> jax.Array:
     """(ng, N) stored scales -> (ng, N) f32 multipliers."""
-    if spec.quant == "mxfp4":  # E8M0
-        return jnp.exp2(scales.astype(jnp.float32) - 127.0)
-    # bf16-bits
-    return jax.lax.bitcast_convert_type(
-        scales.astype(jnp.uint16), jnp.bfloat16
-    ).astype(jnp.float32)
+    return get_codec(spec.quant).decode_scales(scales)
 
 
 # ---------------------------------------------------------------------------

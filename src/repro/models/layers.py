@@ -16,6 +16,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+# quantize_bf8_jnp / dequantize_bf8_jnp are re-exported for back-compat:
+# their canonical home is the codec registry
+from repro.core.codecs import (  # noqa: F401
+    dequantize_bf8_jnp,
+    get_codec,
+    quantize_bf8_jnp,
+)
 from repro.core.decompress import mm
 from repro.dist.sharding import constrain, constrain_qkv
 
@@ -218,62 +225,101 @@ def attention_core(
 CACHE_EMPTY_POS = 1 << 30  # sentinel: empty cache slots masked via huge position
 
 
-def quantize_bf8_jnp(x: jax.Array) -> jax.Array:
-    """bf16/f32 -> E5M2 code (uint8), RNE — the DECA BF8 substrate applied
-    to the KV cache (beyond-paper: halves KV bytes; decode dequantizes on
-    read with the same ALU decode the weight kernel uses)."""
-    h = jax.lax.bitcast_convert_type(
-        x.astype(jnp.float16), jnp.uint16
-    ).astype(jnp.uint32)
-    lower, upper = h & 0xFF, h >> 8
-    round_up = ((lower > 0x80) | ((lower == 0x80) & (upper & 1 == 1))).astype(
-        jnp.uint32
-    )
-    code = upper + round_up
-    overflow = (code & 0x7F) == 0x7C  # finite -> inf: keep truncated value
-    code = jnp.where(overflow & ((upper & 0x7F) < 0x7C), upper, code)
-    return code.astype(jnp.uint8)
+def _kv_codec(quant: str):
+    """KV-cache codec for a `kv_quant` format name ('none' -> unquantized)."""
+    if quant in ("none", "", None):
+        return None
+    codec = get_codec(quant)  # raises ValueError for unregistered formats
+    if not codec.kv_capable:
+        raise ValueError(f"codec {quant!r} does not support KV-cache quantization")
+    return codec
 
 
-def dequantize_bf8_jnp(code: jax.Array) -> jax.Array:
-    bits = code.astype(jnp.uint16) << 8
-    return jax.lax.bitcast_convert_type(bits, jnp.float16).astype(jnp.bfloat16)
+def _check_cache_quant(stored_dtype, codec, quant: str) -> None:
+    """Fail fast (at trace time) when `quant` disagrees with how the cache
+    was built: an unquantized write into a code pool — or vice versa —
+    would otherwise silently `.astype()` raw floats into garbage codes."""
+    is_float = jnp.issubdtype(stored_dtype, jnp.floating)
+    if (codec is None) != is_float:
+        raise ValueError(
+            f"cache stores {stored_dtype} but quant={quant!r}; the cache "
+            "must be initialized with the same kv_quant it is accessed with"
+        )
 
 
 def init_kv_cache(
     b: int, size: int, hkv: int, dh: int, dtype=jnp.bfloat16, quant: str = "none"
 ) -> Dict[str, jax.Array]:
+    """Ring KV cache; `quant` names any kv-capable registered codec.
+    Quantized caches store codes (packed for 4-bit formats) plus, for scaled
+    codecs, one bf16 scale per (slot, head) in `k_scale`/`v_scale`."""
     size = (size + 31) // 32 * 32  # seq shardable over any mesh axis
-    kv_dtype = jnp.uint8 if quant == "bf8" else dtype
-    return {
-        "k": jnp.zeros((b, size, hkv, dh), kv_dtype),
-        "v": jnp.zeros((b, size, hkv, dh), kv_dtype),
+    codec = _kv_codec(quant)
+    if codec is None:
+        kv_dtype, width = dtype, dh
+    else:
+        kv_dtype, width = codec.kv_dtype, codec.kv_code_width(dh)
+    cache = {
+        "k": jnp.zeros((b, size, hkv, width), kv_dtype),
+        "v": jnp.zeros((b, size, hkv, width), kv_dtype),
         "pos": jnp.full((size,), CACHE_EMPTY_POS, jnp.int32),
         "length": jnp.zeros((), jnp.int32),
     }
+    if codec is not None and codec.has_scale:
+        cache["k_scale"] = jnp.zeros((b, size, hkv), jnp.bfloat16)
+        cache["v_scale"] = jnp.zeros((b, size, hkv), jnp.bfloat16)
+    return cache
 
 
 def update_cache(
-    cache: Dict[str, jax.Array], k: jax.Array, v: jax.Array, pos: jax.Array
+    cache: Dict[str, jax.Array],
+    k: jax.Array,
+    v: jax.Array,
+    pos: jax.Array,
+    quant: str = "none",
 ) -> Dict[str, jax.Array]:
     """Append s tokens. Ring semantics: masking is position-based, so slot
     order in the buffer is irrelevant (local-window caches wrap). Quantized
-    (bf8) caches encode on write."""
-    if cache["k"].dtype == jnp.uint8:
-        k, v = quantize_bf8_jnp(k), quantize_bf8_jnp(v)
+    caches encode on write via the codec registry."""
+    codec = _kv_codec(quant)
+    _check_cache_quant(cache["k"].dtype, codec, quant)
+    ks = vs = None
+    if codec is not None:
+        k, ks = codec.kv_encode(k)
+        v, vs = codec.kv_encode(v)
     size = cache["k"].shape[1]
     s = k.shape[1]
     length = cache["length"]
+    dus = jax.lax.dynamic_update_slice_in_dim
     if s >= size:  # static: prefill longer than the (windowed) cache
         ck, cv, cp = k[:, -size:], v[:, -size:], pos[-size:].astype(jnp.int32)
+        cks = ks[:, -size:] if ks is not None else None
+        cvs = vs[:, -size:] if vs is not None else None
     else:
         idx = length % size
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, axis=1)
-        cp = jax.lax.dynamic_update_slice_in_dim(
-            cache["pos"], pos.astype(jnp.int32), idx, axis=0
-        )
-    return {"k": ck, "v": cv, "pos": cp, "length": length + s}
+        ck = dus(cache["k"], k, idx, axis=1)
+        cv = dus(cache["v"], v, idx, axis=1)
+        cp = dus(cache["pos"], pos.astype(jnp.int32), idx, axis=0)
+        cks = dus(cache["k_scale"], ks, idx, axis=1) if ks is not None else None
+        cvs = dus(cache["v_scale"], vs, idx, axis=1) if vs is not None else None
+    out = {"k": ck, "v": cv, "pos": cp, "length": length + s}
+    if cks is not None:
+        out["k_scale"], out["v_scale"] = cks, cvs
+    return out
+
+
+def read_cache_kv(
+    cache: Dict[str, jax.Array], quant: str = "none"
+) -> Tuple[jax.Array, jax.Array]:
+    """Dequantize-on-read for the ring cache (identity when unquantized)."""
+    codec = _kv_codec(quant)
+    _check_cache_quant(cache["k"].dtype, codec, quant)
+    if codec is None:
+        return cache["k"], cache["v"]
+    return (
+        codec.kv_decode(cache["k"], cache.get("k_scale")).astype(jnp.bfloat16),
+        codec.kv_decode(cache["v"], cache.get("v_scale")).astype(jnp.bfloat16),
+    )
 
 
 def init_paged_kv_cache(
@@ -286,14 +332,23 @@ def init_paged_kv_cache(
 ) -> Dict[str, jax.Array]:
     """Block-paged KV pool: `num_blocks` pages of `block_size` tokens shared
     by all requests (device row 0 is the null page — pad/inactive writes land
-    there and stay masked via the position sentinel). Quantized (bf8) pools
-    encode on write like the ring cache."""
-    kv_dtype = jnp.uint8 if quant == "bf8" else dtype
-    return {
-        "kp": jnp.zeros((num_blocks, block_size, hkv, dh), kv_dtype),
-        "vp": jnp.zeros((num_blocks, block_size, hkv, dh), kv_dtype),
+    there and stay masked via the position sentinel). Quantized pools encode
+    on write like the ring cache; scaled codecs add `ks`/`vs` planes holding
+    one bf16 scale per (page, slot, head)."""
+    codec = _kv_codec(quant)
+    if codec is None:
+        kv_dtype, width = dtype, dh
+    else:
+        kv_dtype, width = codec.kv_dtype, codec.kv_code_width(dh)
+    pools = {
+        "kp": jnp.zeros((num_blocks, block_size, hkv, width), kv_dtype),
+        "vp": jnp.zeros((num_blocks, block_size, hkv, width), kv_dtype),
         "ppos": jnp.full((num_blocks, block_size), CACHE_EMPTY_POS, jnp.int32),
     }
+    if codec is not None and codec.has_scale:
+        pools["ks"] = jnp.zeros((num_blocks, block_size, hkv), jnp.bfloat16)
+        pools["vs"] = jnp.zeros((num_blocks, block_size, hkv), jnp.bfloat16)
+    return pools
 
 
 def paged_update_cache(
@@ -303,6 +358,7 @@ def paged_update_cache(
     write_pos: jax.Array,  # (B, S) int32; CACHE_EMPTY_POS for pad tokens
     write_slots: jax.Array,  # (B, S) int32 flat slot ids (block * bsize + off)
     fresh_pages: Optional[jax.Array] = None,  # (F,) page ids, 0 = none
+    quant: str = "none",
 ) -> Dict[str, jax.Array]:
     """Scatter S tokens per request into the shared pool. Slot ids are
     host-computed from each request's block table; pad tokens target the
@@ -313,51 +369,64 @@ def paged_update_cache(
     scatter, so a page recycled from an evicted request can never leak the
     old tenant's KV entries into a gather-read. Entry 0 (the null page,
     always empty) pads the fixed shape."""
-    if cache["kp"].dtype == jnp.uint8:
-        k, v = quantize_bf8_jnp(k), quantize_bf8_jnp(v)
-    nb, bs, hkv, dh = cache["kp"].shape
+    codec = _kv_codec(quant)
+    _check_cache_quant(cache["kp"].dtype, codec, quant)
+    ks = vs = None
+    if codec is not None:
+        k, ks = codec.kv_encode(k)
+        v, vs = codec.kv_encode(v)
+    nb, bs, hkv, width = cache["kp"].shape
     flat = write_slots.reshape(-1)
-    kp = (
-        cache["kp"].reshape(nb * bs, hkv, dh)
-        .at[flat].set(k.reshape(-1, hkv, dh).astype(cache["kp"].dtype))
-        .reshape(nb, bs, hkv, dh)
-    )
-    vp = (
-        cache["vp"].reshape(nb * bs, hkv, dh)
-        .at[flat].set(v.reshape(-1, hkv, dh).astype(cache["vp"].dtype))
-        .reshape(nb, bs, hkv, dh)
-    )
+
+    def scatter(pool, updates):
+        return (
+            pool.reshape((nb * bs,) + pool.shape[2:])
+            .at[flat].set(updates.reshape((-1,) + pool.shape[2:]).astype(pool.dtype))
+            .reshape(pool.shape)
+        )
+
+    out = {
+        "kp": constrain(scatter(cache["kp"], k), "pkv"),
+        "vp": constrain(scatter(cache["vp"], v), "pkv"),
+    }
     ppos = cache["ppos"]
     if fresh_pages is not None:
         ppos = ppos.at[fresh_pages].set(CACHE_EMPTY_POS)
-    ppos = (
+    out["ppos"] = (
         ppos.reshape(nb * bs)
         .at[flat].set(write_pos.reshape(-1).astype(jnp.int32))
         .reshape(nb, bs)
     )
-    return {
-        "kp": constrain(kp, "pkv"),
-        "vp": constrain(vp, "pkv"),
-        "ppos": ppos,
-    }
+    if ks is not None:
+        out["ks"] = constrain(scatter(cache["ks"], ks), "pkvs")
+        out["vs"] = constrain(scatter(cache["vs"], vs), "pkvs")
+    return out
 
 
 def paged_gather_kv(
     cache: Dict[str, jax.Array],
     block_tables: jax.Array,  # (B, MB) int32 device page ids (0 = null page)
+    quant: str = "none",
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Gather each request's pages into a contiguous (B, MB*bsize, Hkv, Dh)
     KV view plus per-request key positions (empty slots carry the sentinel
     and mask to exactly-zero attention weight). Quantized pools decode on
-    read — the DECA dequantize-on-read path."""
-    k = jnp.take(cache["kp"], block_tables, axis=0)  # (B, MB, bs, Hkv, Dh)
+    read — the DECA dequantize-on-read path, via the codec registry."""
+    codec = _kv_codec(quant)
+    _check_cache_quant(cache["kp"].dtype, codec, quant)
+    k = jnp.take(cache["kp"], block_tables, axis=0)  # (B, MB, bs, Hkv, W)
     v = jnp.take(cache["vp"], block_tables, axis=0)
     pos = jnp.take(cache["ppos"], block_tables, axis=0)  # (B, MB, bs)
     b, mb, bs = pos.shape
     k = k.reshape(b, mb * bs, *k.shape[3:])
     v = v.reshape(b, mb * bs, *v.shape[3:])
-    if k.dtype == jnp.uint8:
-        k, v = dequantize_bf8_jnp(k), dequantize_bf8_jnp(v)
+    if codec is not None:
+        ks = vs = None
+        if codec.has_scale:
+            ks = jnp.take(cache["ks"], block_tables, axis=0).reshape(b, mb * bs, -1)
+            vs = jnp.take(cache["vs"], block_tables, axis=0).reshape(b, mb * bs, -1)
+        k = codec.kv_decode(k, ks).astype(jnp.bfloat16)
+        v = codec.kv_decode(v, vs).astype(jnp.bfloat16)
     return k, v, pos.reshape(b, mb * bs)
 
 
@@ -400,9 +469,11 @@ def paged_attention_block(
         tok_pos = positions if positions.ndim == 2 else positions[0]
 
     new_cache = paged_update_cache(
-        cache, k, v, write_pos, write_slots, fresh_pages
+        cache, k, v, write_pos, write_slots, fresh_pages, quant=cfg.kv_quant
     )
-    k_all, v_all, k_pos = paged_gather_kv(new_cache, block_tables)
+    k_all, v_all, k_pos = paged_gather_kv(
+        new_cache, block_tables, quant=cfg.kv_quant
+    )
     k_all, v_all = constrain(k_all, "bshd"), constrain(v_all, "bshd")
     out = attention_core(
         q, k_all, v_all,
@@ -448,10 +519,9 @@ def attention_block(
     window = cfg.window if local else 0
     q_pos = tok_pos[0]  # positions shared across the batch (synthetic pipeline)
     if cache is not None:
-        new_cache = update_cache(cache, k, v, q_pos)
-        k_all, v_all = new_cache["k"], new_cache["v"]
-        if k_all.dtype == jnp.uint8:  # DECA-style dequantize-on-read
-            k_all, v_all = dequantize_bf8_jnp(k_all), dequantize_bf8_jnp(v_all)
+        new_cache = update_cache(cache, k, v, q_pos, quant=cfg.kv_quant)
+        # DECA-style dequantize-on-read (identity for unquantized caches)
+        k_all, v_all = read_cache_kv(new_cache, quant=cfg.kv_quant)
         out = attention_core(
             q, k_all, v_all,
             q_pos=q_pos, k_pos=new_cache["pos"],

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.codecs import get_codec
 from repro.dist.sharding import constrain
 from repro.models import layers as L
 
@@ -36,6 +37,14 @@ def _kind_layout(cfg: ModelConfig) -> Tuple[str, ...]:
 
 class Model:
     def __init__(self, cfg: ModelConfig):
+        if cfg.kv_quant != "none":
+            # fail fast on unregistered / non-KV formats instead of deep in
+            # a jitted cache init
+            codec = get_codec(cfg.kv_quant)
+            if not codec.kv_capable:
+                raise ValueError(
+                    f"kv_quant={cfg.kv_quant!r} is not a KV-capable codec"
+                )
         self.cfg = cfg
         self.kinds = _kind_layout(cfg)
         self.uniform = len(set(self.kinds)) == 1 and cfg.scan_layers
@@ -130,14 +139,29 @@ class Model:
         return {str(i): c for i, c in enumerate(caches)}
 
     def init_paged_cache(
-        self, num_blocks: int, block_size: int, dtype=jnp.bfloat16
+        self,
+        num_blocks: int,
+        block_size: int,
+        dtype=jnp.bfloat16,
+        kv_quant: Optional[str] = None,
     ) -> Any:
         """Block-paged KV pools (serve/paged_cache.py owns the block tables).
 
         `num_blocks` counts allocatable pages; one extra null page (device
         row 0) absorbs pad/inactive writes. Only attention stacks page —
-        ssm/rec state is O(1) per request and needs no paging."""
+        ssm/rec state is O(1) per request and needs no paging.
+
+        `kv_quant` (default `cfg.kv_quant`) names the pool's codec; the
+        decode path quantizes/dequantizes with `cfg.kv_quant`, so an
+        explicit value must match — build the Model with the desired
+        `kv_quant` (GenerationEngine's `kv_quant=` arg does this)."""
         cfg = self.cfg
+        if kv_quant is not None and kv_quant != cfg.kv_quant:
+            raise ValueError(
+                f"pool kv_quant={kv_quant!r} != cfg.kv_quant={cfg.kv_quant!r}; "
+                "the decode path reads cfg.kv_quant — rebuild the Model with "
+                "the desired format"
+            )
         bad = [k for k in self.kinds if k not in ("attn", "attn_local")]
         if bad:
             raise NotImplementedError(

@@ -24,6 +24,7 @@ Two cache regimes (DESIGN.md §6/§10):
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import functools
 import math
 from typing import Any, Callable, Dict, Optional, Union
@@ -124,6 +125,12 @@ class GenerationEngine:
     `paged="auto"` (default) uses the paged path for attention stacks and
     falls back to the dense ring cache for ssm/rec stacks; `paged=False`
     forces the legacy fixed-batch path (the golden reference in tests).
+
+    `kv_quant` names any KV-capable codec from `repro.core.codecs`
+    (bf8/int8/int4/mxfp4/nf4/...) and quantizes the KV pools end-to-end:
+    encode-on-write, dequantize-on-read, per-(slot, head) bf16 scales for
+    scaled codecs, in both the paged pool and the dense ring cache. Default
+    is the model config's `kv_quant`.
     """
 
     def __init__(
@@ -140,7 +147,15 @@ class GenerationEngine:
         block_size: int = 32,
         max_slots: int = 4,
         num_blocks: Optional[int] = None,
+        kv_quant: Optional[str] = None,
     ):
+        if kv_quant is not None and kv_quant != model.cfg.kv_quant:
+            # end-to-end kv_quant plumbing: the format name is a codec-
+            # registry key; rebuilding the Model keeps cache init, the
+            # quantize-on-write/dequantize-on-read sites, and the pool
+            # layout on one consistent value (params are unaffected)
+            model = type(model)(dataclasses.replace(model.cfg, kv_quant=kv_quant))
+        self.kv_quant = model.cfg.kv_quant
         self.model = model
         self.cfg = model.cfg
         self.mesh = mesh
@@ -166,7 +181,8 @@ class GenerationEngine:
             if num_blocks is None:
                 num_blocks = max_slots * self.max_blocks
             self.kv = PagedKVCache(
-                model, num_blocks=num_blocks, block_size=block_size
+                model, num_blocks=num_blocks, block_size=block_size,
+                kv_quant=self.kv_quant,
             )
             if mesh is not None:
                 ctx = sh.ShardingCtx(mesh, fsdp=fsdp, mode="serve")

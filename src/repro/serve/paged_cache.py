@@ -26,6 +26,7 @@ import math
 from typing import Any, Dict, List, Optional
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 
@@ -72,11 +73,15 @@ class PagedKVCache:
         num_blocks: int,
         block_size: int,
         dtype=jnp.bfloat16,
+        kv_quant: Optional[str] = None,
     ):
         self.block_size = block_size
         self.num_blocks = num_blocks
+        self.kv_quant = kv_quant if kv_quant is not None else model.cfg.kv_quant
         self.allocator = BlockAllocator(num_blocks)
-        self.pools = model.init_paged_cache(num_blocks, block_size, dtype)
+        self.pools = model.init_paged_cache(
+            num_blocks, block_size, dtype, kv_quant=self.kv_quant
+        )
         self._tables: Dict[int, List[int]] = {}
         self._reserved: Dict[int, int] = {}
         self._fresh: List[int] = []  # device pages allocated since last drain
@@ -85,6 +90,16 @@ class PagedKVCache:
 
     def blocks_for(self, n_tokens: int) -> int:
         return math.ceil(n_tokens / self.block_size)
+
+    def bytes_per_token(self) -> float:
+        """Pool bytes one KV token slot costs across all layers — codes plus
+        any codec scale planes plus the position plane. Codec-driven: a
+        quantized `kv_quant` pool shows up directly as a smaller number
+        (benchmarks/run.py serving_paged reports it)."""
+        total = sum(
+            leaf.nbytes for leaf in jax.tree_util.tree_leaves(self.pools)
+        )
+        return total / ((self.num_blocks + 1) * self.block_size)
 
     @property
     def free_blocks(self) -> int:

@@ -239,4 +239,8 @@ class Scheduler:
         # fraction of block-steps a max_len ring cache would have held that
         # the paged pool never allocated
         st["padding_waste_saved"] = 1.0 - st["paged_block_steps"] / dense
+        # codec-driven KV footprint: pool bytes per token slot (all layers),
+        # so a quantized kv_quant shows its byte saving next to the paging
+        # stats
+        st["kv_bytes_per_token"] = self.cache.bytes_per_token()
         return st

@@ -15,6 +15,7 @@ FORMATS = [
     "bf16_100", "bf16_50", "bf16_10",
     "bf8_100", "bf8_50", "bf8_20", "bf8_5",
     "mxfp4_100", "mxfp4_50", "int8_50", "int4_25",
+    "nf4_100", "nf4_50",  # registry-only codec: zero kernel changes
 ]
 SHAPES = [(32, 8), (64, 128), (128, 96), (256, 256), (512, 64)]
 
@@ -69,25 +70,34 @@ def test_decompress_output_dtype():
 
 
 def test_bf8_alu_decode_equals_lut_decode():
-    """The kernel's ALU bit-twiddle decode must agree with the numpy
+    """The registry's ALU bit-twiddle decode (the one implementation both
+    ref.py and the Pallas kernels use) must agree with the numpy
     high-byte-of-fp16 dequantization for every code (DESIGN.md §2)."""
-    from repro.core.compression import dequantize_bf8
-    from repro.kernels.deca_decompress import _decode_bf8
+    from repro.core.codecs import dequantize_bf8, get_codec
 
     codes = np.arange(256, dtype=np.uint8).reshape(1, 16, 16)
     want = dequantize_bf8(codes)
-    got = np.asarray(_decode_bf8(jnp.asarray(codes)))
+    got = np.asarray(get_codec("bf8").decode_values(jnp.asarray(codes)))
     np.testing.assert_array_equal(
         got[np.isfinite(want)], want[np.isfinite(want)]
     )
     assert np.isinf(got[np.isinf(want)]).all()
 
 
-def test_fp4_alu_decode_equals_grid():
-    from repro.kernels.deca_decompress import _decode_fp4
+def test_kernel_decode_routes_through_registry():
+    """ref.py and deca_decompress.py must share exactly one jnp decoder per
+    format: both module-level hooks are the codec's decode_values."""
+    from repro.core.codecs import get_codec
+    from repro.kernels import ref
+    from repro.kernels import deca_decompress as dd
 
-    nib = np.arange(16, dtype=np.uint8).reshape(1, 4, 4)
-    grid = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], np.float32)
-    want = np.where(nib >> 3 == 1, -grid[nib & 7], grid[nib & 7])
-    got = np.asarray(_decode_fp4(jnp.asarray(nib)))
-    np.testing.assert_array_equal(got, want)
+    codes = np.arange(256, dtype=np.uint8).reshape(1, 16, 16)
+    for fmt in ("bf8", "mxfp4", "int8", "int4", "nf4", "bf16"):
+        spec = get_spec(fmt)
+        want = np.asarray(get_codec(fmt).decode_values(jnp.asarray(codes)))
+        np.testing.assert_array_equal(
+            np.asarray(ref.dequant_codes(jnp.asarray(codes), spec)), want
+        )
+        np.testing.assert_array_equal(
+            np.asarray(dd.decode_values(jnp.asarray(codes), spec)), want
+        )

@@ -14,11 +14,11 @@ from hypothesis import given, settings, strategies as st
 
 from repro.models.layers import (
     CACHE_EMPTY_POS,
-    dequantize_bf8_jnp,
     init_kv_cache,
     init_paged_kv_cache,
     paged_gather_kv,
     paged_update_cache,
+    read_cache_kv,
     update_cache,
 )
 from repro.serve.paged_cache import BlockAllocator, PagedKVCache
@@ -121,7 +121,7 @@ def test_admission_reservation_blocks_oversubscription():
 @given(
     n_tokens=st.integers(1, 40),
     block_size=st.sampled_from([2, 4, 8]),
-    quant=st.sampled_from(["none", "bf8"]),
+    quant=st.sampled_from(["none", "bf8", "int8", "nf4"]),
     seed=st.integers(0, 2**16),
 )
 def test_gather_read_matches_dense_ring_cache(n_tokens, block_size, quant, seed):
@@ -148,19 +148,19 @@ def test_gather_read_matches_dense_ring_cache(n_tokens, block_size, quant, seed)
         kc = jnp.asarray(ks[:, i : i + s])
         vc = jnp.asarray(vs[:, i : i + s])
         pos = jnp.arange(i, i + s, dtype=jnp.int32)
-        ring = update_cache(ring, kc, vc, pos)
+        ring = update_cache(ring, kc, vc, pos, quant=quant)
         slots = cache.write_slots(0, i, s)[None]
         fresh = jnp.asarray(cache.drain_fresh(num_blocks))
-        pool = paged_update_cache(pool, kc, vc, pos[None], slots, fresh)
+        pool = paged_update_cache(
+            pool, kc, vc, pos[None], slots, fresh, quant=quant
+        )
         i += s
 
     mb = math.ceil(n_tokens / block_size)
     table = cache.block_table_row(0, mb)[None]
-    kg, vg, pg = paged_gather_kv(pool, jnp.asarray(table))
+    kg, vg, pg = paged_gather_kv(pool, jnp.asarray(table), quant=quant)
 
-    rk, rv = ring["k"], ring["v"]
-    if quant == "bf8":
-        rk, rv = dequantize_bf8_jnp(rk), dequantize_bf8_jnp(rv)
+    rk, rv = read_cache_kv(ring, quant=quant)
     # gathered index i is position i (table order is append order)
     np.testing.assert_array_equal(
         np.asarray(pg)[0, :n_tokens], np.asarray(ring["pos"])[:n_tokens]
