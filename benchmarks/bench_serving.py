@@ -1,10 +1,15 @@
-"""Paged-serving benchmark: mixed-length traffic through the continuous-
-batching scheduler, reporting decode throughput plus the slot-occupancy and
-padding-waste stats the paged KV cache exists to win (DESIGN.md §10).
+"""Paged-serving benchmarks: mixed-length traffic through the continuous-
+batching scheduler.
 
-The `derived` column carries the capacity story: mean slot occupancy, peak
-pages in flight, and the fraction of KV block-steps a max_len ring cache
-would have held that the paged pool never allocated.
+`bench_paged_serving` reports the slot-occupancy and padding-waste stats
+the paged KV cache exists to win (DESIGN.md §10).
+
+`bench_decode_throughput` is the PR 4 deliverable: decode tokens/sec with
+the per-token host round-trip (`decode_chunk=1`, the pre-PR scheduler) vs
+the device-resident chunked loop (DESIGN.md §12) — same model, same
+compressed weights, same mixed-length traffic, max_slots >= 8. The
+before/after numbers are committed in BENCH_PR4.json and guarded by
+benchmarks/check_regression.py.
 """
 from __future__ import annotations
 
@@ -54,6 +59,85 @@ def bench_paged_serving() -> List[Dict[str, str]]:
             f"tok_s={n_tok / dt:.1f} occupancy={st['mean_occupancy']:.2f} "
             f"peak_blocks={st['peak_blocks']} "
             f"waste_saved={st['padding_waste_saved']:.2%} "
+            f"prefill_waste={st['prefill_padding_waste']:.2%} "
             f"kvB_per_tok={st['kv_bytes_per_token']:.0f}",
         ))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# PR 4 decode-throughput deliverable
+# ---------------------------------------------------------------------------
+
+def _serve_workload(engine, prompts, n_steps) -> float:
+    """Submit the workload and drain it; returns tokens/sec."""
+    rids = [engine.submit(p, max_new_tokens=n_steps) for p in prompts]
+    t0 = time.perf_counter()
+    done = engine.run_until_drained()
+    dt = time.perf_counter() - t0
+    return sum(len(done[r]) for r in rids) / dt
+
+
+def _decode_tok_s(chunk: int, *, legacy: bool = False, max_slots: int = 8,
+                  n_requests: int = 16, n_steps: int = 24,
+                  fmt: str = "mxfp4_100", reps: int = 3) -> float:
+    """Tokens/sec through the paged engine. `legacy=True` reproduces the
+    pre-PR4 hot path exactly: one jit call per prefill, one host round-trip
+    per decoded token, and the dense-materializing compressed GeMM (no
+    decode-shaped GeMV)."""
+    from repro.kernels import ops
+
+    cfg = get_smoke_config("llama3-8b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cparams = compress_tree(params, get_spec(fmt))
+    rng = np.random.default_rng(0)
+    lengths = [int(x) for x in rng.integers(8, 49, n_requests)]
+    prompts = [
+        rng.integers(0, cfg.vocab_size, n).astype(np.int32) for n in lengths
+    ]
+    orig_gemv = ops.GEMV_MAX_M
+    if legacy:
+        ops.GEMV_MAX_M = -1  # every compressed matmul materializes (K, N)
+    try:
+        engine = GenerationEngine(
+            model, cparams, max_len=128, block_size=16, max_slots=max_slots,
+            decode_chunk=chunk, prefill_batch=not legacy,
+        )
+        _serve_workload(engine, prompts, n_steps)  # warmup: compile buckets
+        return max(
+            _serve_workload(engine, prompts, n_steps) for _ in range(reps)
+        )
+    finally:
+        ops.GEMV_MAX_M = orig_gemv
+
+
+def decode_throughput_results(chunk: int = 16, **kw) -> Dict[str, float]:
+    """Before/after numbers for BENCH_PR4.json and check_regression.py."""
+    before = _decode_tok_s(1, legacy=True, **kw)  # the pre-PR4 serving loop
+    after = _decode_tok_s(chunk, **kw)            # device-resident chunks
+    return {
+        "decode_tok_s_before": round(before, 2),
+        "decode_tok_s_after": round(after, 2),
+        "speedup": round(after / before, 3),
+        "chunk": chunk,
+        "max_slots": kw.get("max_slots", 8),
+    }
+
+
+def decode_row(res: Dict[str, float]) -> Dict[str, str]:
+    """The one CSV row format for decode-throughput results — shared by
+    `benchmarks/run.py serving_decode` and check_regression's --csv-append
+    so the artifact and the guard can never diverge."""
+    return row(
+        "decode_throughput",
+        0.0,
+        f"tok_s_before={res['decode_tok_s_before']} "
+        f"tok_s_after={res['decode_tok_s_after']} "
+        f"speedup={res['speedup']}x chunk={res['chunk']} "
+        f"max_slots={res['max_slots']}",
+    )
+
+
+def bench_decode_throughput() -> List[Dict[str, str]]:
+    return [decode_row(decode_throughput_results())]

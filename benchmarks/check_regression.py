@@ -1,0 +1,72 @@
+"""Decode-throughput regression guard (CI; DESIGN.md §12 methodology).
+
+Re-runs the PR 4 decode-tokens/sec benchmark and compares against the
+committed BENCH_PR4.json baseline. Absolute tokens/sec is machine-bound, so
+the guard checks the machine-portable number: the *speedup* of the
+device-resident chunked loop over the legacy per-token serving loop, which
+must retain at least half the committed speedup (floor 1.2x). Exits
+non-zero on regression.
+
+    python benchmarks/check_regression.py            # guard (CI)
+    python benchmarks/check_regression.py --update   # rewrite the baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import platform
+import sys
+
+BASELINE = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR4.json"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="measure and rewrite BENCH_PR4.json")
+    ap.add_argument("--baseline", default=str(BASELINE))
+    ap.add_argument("--csv-append", metavar="FILE",
+                    help="also append this run's numbers as a CSV row "
+                         "(benchmarks/run.py format) — the guard and the "
+                         "artifact then share one measurement")
+    args = ap.parse_args()
+
+    from benchmarks.bench_serving import decode_row, decode_throughput_results
+    from benchmarks.common import csv_line
+
+    res = decode_throughput_results()
+    if args.csv_append:
+        with open(args.csv_append, "a") as f:
+            f.write(csv_line(decode_row(res)) + "\n")
+    if args.update:
+        res["machine"] = platform.machine()
+        res["note"] = (
+            "decode tokens/sec, mixed-length traffic (prompts 8-48, 16 "
+            "requests, 24 new tokens, max_slots=8, mxfp4_100 weights); "
+            "before = pre-PR4 loop (per-request prefill, per-token host "
+            "sync, dense-materializing GeMM), after = batched prefill + "
+            "device-resident chunked decode + decode-shaped GeMV"
+        )
+        pathlib.Path(args.baseline).write_text(json.dumps(res, indent=2) + "\n")
+        print(f"wrote {args.baseline}: {res}")
+        return 0
+
+    base = json.loads(pathlib.Path(args.baseline).read_text())
+    need = max(1.2, 0.5 * base["speedup"])
+    print(
+        f"baseline: {base['decode_tok_s_before']} -> "
+        f"{base['decode_tok_s_after']} tok/s ({base['speedup']}x)\n"
+        f"this run: {res['decode_tok_s_before']} -> "
+        f"{res['decode_tok_s_after']} tok/s ({res['speedup']}x)\n"
+        f"required speedup: >= {need:.2f}x"
+    )
+    if res["speedup"] < need:
+        print("REGRESSION: chunked decode speedup fell below the guard")
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,6 +24,10 @@ def row(name: str, us: float, derived: str) -> Dict[str, str]:
     return {"name": name, "us_per_call": f"{us:.2f}", "derived": derived}
 
 
+def csv_line(r: Dict[str, str]) -> str:
+    return f"{r['name']},{r['us_per_call']},{r['derived']}"
+
+
 def emit(rows: List[Dict[str, str]]) -> None:
     for r in rows:
-        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+        print(csv_line(r))

@@ -28,6 +28,7 @@ ALL = [
     ("tpu_fused", tf.bench_fused_vs_unfused),
     ("pallas_interpret", tf.bench_pallas_interpret_correctness),
     ("serving_paged", bs.bench_paged_serving),
+    ("serving_decode", bs.bench_decode_throughput),
 ]
 
 

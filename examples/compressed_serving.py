@@ -63,6 +63,9 @@ def main():
                          "paged scheduler and report occupancy / padding-"
                          "waste stats")
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="decode steps per device-resident chunk (1 = the "
+                         "legacy one-host-sync-per-token loop)")
     ap.add_argument("--kv-quant", default=None, metavar="FMT",
                     help="quantize the KV cache with any KV-capable codec "
                          "from repro.core.codecs (bf8/int8/int4/mxfp4/nf4)")
@@ -92,7 +95,8 @@ def main():
         engine = GenerationEngine(model, cparams, max_len=128,
                                   temperature=0.0, mesh=mesh,
                                   block_size=args.block_size, max_slots=4,
-                                  kv_quant=args.kv_quant)
+                                  kv_quant=args.kv_quant,
+                                  decode_chunk=args.chunk)
         if args.kv_quant:
             print(f"KV pools quantized with {args.kv_quant}: "
                   f"{engine.kv.bytes_per_token():.0f} B/token (all layers)")

@@ -26,10 +26,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.codecs import get_codec
 from repro.core.compression import CompressedTensor
 from repro.core.formats import CompressionSpec
+from repro.kernels.autotune import select_block
 
 
 # ---------------------------------------------------------------------------
@@ -111,21 +113,16 @@ def decompress_pallas(
     K, N = ct.shape
     G = spec.group
     if K % G:
-        # compression produces whole groups only; without this the
-        # block-shrink loop below underflows block_k to 0 (div-by-zero)
+        # compression produces whole groups only; a non-group K cannot be
+        # tiled into whole-group blocks at all
         raise ValueError(
             f"decompress_pallas: K={K} is not a multiple of the compression "
             f"group {G} (K % G == {K % G}); CompressedTensor shape is invalid"
         )
-    block_k = min(block_k, K)
-    block_k = max(G, block_k - block_k % G)  # keep whole groups per block
-    block_n = min(block_n, N)
-    # shrink blocks until they tile the array exactly (terminates at G,
-    # which always divides K after the check above)
-    while K % block_k:
-        block_k -= G
-    while N % block_n:
-        block_n -= 1
+    # largest-divisor selection (autotune.py): O(sqrt) at trace time and
+    # warns on non-lane-aligned block_n instead of silently shrinking to it
+    block_k = select_block(K, block_k, multiple=G, minimum=G, name="block_k")
+    block_n = select_block(N, block_n, warn_lanes=True, name="block_n")
     gb = block_k // G  # groups per block
     ck = ct.codes.shape[1]  # packed bytes per group
 
@@ -147,5 +144,8 @@ def decompress_pallas(
         in_specs=in_specs,
         out_specs=pl.BlockSpec((block_k, block_n), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((K, N), out_dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
         interpret=interpret,
     )(*operands)

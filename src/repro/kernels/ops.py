@@ -5,6 +5,13 @@ and the pure-jnp reference path. The reference path is what the distributed
 model graphs use (it lowers to plain XLA HLO everywhere, including the
 512-device dry-run); the Pallas path is the TPU hot-spot implementation,
 validated bit-exactly against the reference in tests/.
+
+Regime split (DESIGN.md §12): below `GEMV_MAX_M` rows the matmul is the
+decode GeMV regime — bandwidth-bound on the weight stream — and both impls
+route to the decode-shaped variants (`ref.decompress_gemv` /
+`decompress_gemv_pallas`) that never materialize the dense (K, N) weight.
+The N-tiled GeMV is bit-identical to the full-matrix path, so routing is a
+pure performance decision and golden-battery equivalence is unaffected.
 """
 from __future__ import annotations
 
@@ -16,7 +23,12 @@ import jax.numpy as jnp
 from repro.core.compression import CompressedTensor
 from repro.kernels import ref
 from repro.kernels.deca_decompress import decompress_pallas
-from repro.kernels.deca_gemm import decompress_gemm_pallas
+from repro.kernels.deca_gemm import decompress_gemm_pallas, decompress_gemv_pallas
+
+# Rows at or below which the decode-shaped GeMV path is used. The decode
+# step's M is the continuous-batching slot count (<= ~32); prefill and
+# training matmuls sit far above the threshold and keep the GeMM tiling.
+GEMV_MAX_M = 32
 
 
 def _use_interpret() -> bool:
@@ -50,16 +62,39 @@ def decompress_gemm(
 ) -> jax.Array:
     """Fused-semantics compressed GeMM: x (..., K) @ W (K, N).
 
-    Leading dims of x are flattened to M. impl: 'ref' | 'pallas'.
+    Leading dims of x are flattened to M. impl: 'ref' | 'pallas' | 'gemv'
+    (explicit decode-shaped path; 'ref'/'pallas' auto-route to it when
+    M <= GEMV_MAX_M).
     """
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    if impl == "ref":
-        out = ref.decompress_gemm(x2, ct, out_dtype=out_dtype)
+    m = x2.shape[0]
+    # the GeMV variants tile fewer dims than the GeMM grid; drop the block
+    # kwargs they don't take so the same call works on either side of the
+    # M-threshold (block_m / block_k are meaningless with M kept whole /
+    # the full-K contraction)
+    gemv_ref_kw = {k: v for k, v in block_kwargs.items() if k == "block_n"}
+    gemv_pl_kw = {
+        k: v for k, v in block_kwargs.items() if k in ("block_n", "block_k")
+    }
+    if impl == "gemv":
+        out = ref.decompress_gemv(x2, ct, out_dtype=out_dtype, **gemv_ref_kw)
+    elif impl == "ref":
+        if m <= GEMV_MAX_M:
+            out = ref.decompress_gemv(x2, ct, out_dtype=out_dtype, **gemv_ref_kw)
+        else:
+            out = ref.decompress_gemm(x2, ct, out_dtype=out_dtype)
     elif impl == "pallas":
-        out = decompress_gemm_pallas(
-            x2, ct, out_dtype=out_dtype, interpret=_use_interpret(), **block_kwargs
-        )
+        if m <= GEMV_MAX_M:
+            out = decompress_gemv_pallas(
+                x2, ct, out_dtype=out_dtype, interpret=_use_interpret(),
+                **gemv_pl_kw,
+            )
+        else:
+            out = decompress_gemm_pallas(
+                x2, ct, out_dtype=out_dtype, interpret=_use_interpret(),
+                **block_kwargs,
+            )
     else:
         raise ValueError(impl)
     return out.reshape(*lead, out.shape[-1])

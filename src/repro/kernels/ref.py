@@ -15,6 +15,8 @@ kernels share exactly one decode implementation per format.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -50,23 +52,9 @@ def expand_mask(mask: jax.Array, group: int) -> jax.Array:
 
 def decompress(ct: CompressedTensor, out_dtype=jnp.bfloat16) -> jax.Array:
     """Full DECA pipeline: CompressedTensor -> dense (K, N) weights."""
-    spec = ct.spec
-    K, N = ct.shape
-    vals = dequant_codes(ct.codes, spec)  # (ng, k_cap, N)
-
-    if ct.scales is not None:
-        vals = vals * dequant_scales(ct.scales, spec)[:, None, :]
-
-    if ct.mask is None:
-        return vals.reshape(K, N).astype(out_dtype)
-
-    bits = expand_mask(ct.mask, spec.group)  # (ng, G, N)
-    # prefix-sum gives each set bit its slot in the packed nonzero array
-    prefix = jnp.cumsum(bits, axis=1) - bits
-    idx = jnp.clip(prefix, 0, spec.k_cap - 1)
-    gathered = jnp.take_along_axis(vals, idx, axis=1)  # (ng, G, N)
-    dense = jnp.where(bits == 1, gathered, 0.0)
-    return dense.reshape(K, N).astype(out_dtype)
+    return _decompress_tile(ct.codes, ct.mask, ct.scales, ct.spec).astype(
+        out_dtype
+    )
 
 
 def decompress_gemm(
@@ -77,6 +65,109 @@ def decompress_gemm(
     return jnp.dot(
         x.astype(jnp.bfloat16), w, preferred_element_type=jnp.float32
     ).astype(out_dtype)
+
+
+def _decompress_tile(codes, mask, scales, spec: CompressionSpec) -> jax.Array:
+    """Decompress one column tile: (ng, ck, bn) codes -> (K, bn) f32 dense.
+    Same per-element pipeline as `decompress`, restricted to `bn` columns —
+    every stage (codec decode, scale multiply, mask prefix-sum, gather) is
+    column-local, so the tile is bitwise the matching slice of the full
+    decompressed matrix."""
+    vals = get_codec(spec.quant).decode_values(codes)  # (ng, k_cap, bn)
+    if scales is not None:
+        vals = vals * get_codec(spec.quant).decode_scales(scales)[:, None, :]
+    ng, _, bn = vals.shape
+    if mask is None:
+        return vals.reshape(ng * spec.group, bn)
+    bits = expand_mask(mask, spec.group)
+    prefix = jnp.cumsum(bits, axis=1) - bits
+    idx = jnp.clip(prefix, 0, spec.k_cap - 1)
+    gathered = jnp.take_along_axis(vals, idx, axis=1)
+    dense = jnp.where(bits == 1, gathered, 0.0)
+    return dense.reshape(ng * spec.group, bn)
+
+
+GEMV_UNROLL_MAX = 8  # column tiles computed unrolled before falling to scan
+
+
+def decompress_gemv(
+    x: jax.Array,
+    ct: CompressedTensor,
+    *,
+    block_n: Optional[int] = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Decode-shaped compressed GeMV: x (M, K) @ W (K, N) without ever
+    materializing the dense (K, N) weight.
+
+    The serving decode step is the GeMV regime (M = a handful of
+    continuous-batching slots): the full-matrix `decompress_gemm` pays a
+    dense f32 (K, N) intermediate per layer per token, pure bandwidth waste
+    when the matmul itself is bandwidth-bound (DESIGN.md §12). Here the
+    contraction walks column tiles: each dequantizes one (K, block_n)
+    group-local tile to bf16 and contracts it immediately, so no (K, N)
+    dense intermediate ever exists. Few tiles (the common decode shapes)
+    are unrolled — a `lax.scan` step costs ~100us of loop machinery on
+    CPU, swamping the tile work itself; many tiles fall back to the scan,
+    which keeps exactly one tile live regardless of N.
+
+    Tiling over N (not K) keeps each output element a single full-K dot —
+    the result is *bit-identical* to `decompress_gemm`, which K-split
+    accumulation would not be (f32 addition is not associative)."""
+    spec = ct.spec
+    K, N = ct.shape
+    if x.shape[1] != K:
+        raise ValueError(f"x K dim {x.shape[1]} != weight K {K}")
+    if block_n is None:
+        from repro.kernels.autotune import select_block
+
+        # force >= 2 tiles whenever N splits at all: with one tile the full
+        # dense matrix would appear after all
+        block_n = select_block(N, max(1, min(128, N // 2)))
+        if block_n < 8 and N // block_n > GEMV_UNROLL_MAX:
+            # awkward N (prime-ish): every divisor <= N//2 is tiny, and a
+            # long scan of 1..7-wide tiles pays ~100us of loop machinery
+            # per step — far worse than the dense materialization a single
+            # whole-matrix tile costs. Real model dims are lane multiples,
+            # so the serving path never lands here.
+            block_n = N
+    if N % block_n:
+        raise ValueError(f"block_n={block_n} does not divide N={N}")
+    nb = N // block_n
+    xb = x.astype(jnp.bfloat16)
+
+    def tile(codes, mask, scales):
+        w = _decompress_tile(codes, mask, scales, spec).astype(jnp.bfloat16)
+        return jnp.dot(xb, w, preferred_element_type=jnp.float32)
+
+    if nb == 1:
+        return tile(ct.codes, ct.mask, ct.scales).astype(out_dtype)
+
+    def col(a, i):
+        return None if a is None else a[..., i * block_n:(i + 1) * block_n]
+
+    if nb <= GEMV_UNROLL_MAX:
+        outs = [
+            tile(col(ct.codes, i), col(ct.mask, i), col(ct.scales, i))
+            for i in range(nb)
+        ]
+        return jnp.concatenate(outs, axis=1).astype(out_dtype)
+
+    def split(a):
+        # (..., N) -> (nb, ..., block_n) scan stack over column tiles
+        if a is None:
+            return None
+        return jnp.moveaxis(a.reshape(a.shape[:-1] + (nb, block_n)), -2, 0)
+
+    xs = (split(ct.codes), split(ct.mask), split(ct.scales))
+
+    def body(_, cms):
+        codes, mask, scales = cms
+        return None, tile(codes, mask, scales)
+
+    _, tiles = jax.lax.scan(body, None, xs)  # (nb, M, block_n)
+    out = jnp.moveaxis(tiles, 0, 1).reshape(x.shape[0], N)
+    return out.astype(out_dtype)
 
 
 def dense_roundtrip(w: np.ndarray, spec: CompressionSpec) -> np.ndarray:

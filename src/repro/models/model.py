@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -377,3 +377,57 @@ class Model:
             },
         )
         return logits[:, -1, :], new_cache
+
+    def decode_chunk_paged(
+        self,
+        params: Params,
+        tokens0: jax.Array,       # (B, 1) last sampled token per slot
+        cache: Any,               # init_paged_cache pool tree
+        block_tables: jax.Array,  # (B, MB) — static for the whole chunk
+        positions: jax.Array,     # (C, B, 1) per-step per-slot positions
+        write_slots: jax.Array,   # (C, B, 1) precomputed flat slot ids
+        write_pos: jax.Array,     # (C, B, 1) write positions
+        fresh_pages: jax.Array,   # (C, F) pages to scrub (row 0 real)
+        *,
+        sample_fn: Callable[[jax.Array, jax.Array], jax.Array],
+        max_steps: jax.Array,     # (B,) steps this slot may still take
+        eos_ids: jax.Array,       # (B,) int32 eos token, -1 = none
+        active: jax.Array,        # (B,) bool — slot holds a live request
+    ) -> Tuple[jax.Array, Any]:
+        """Device-resident multi-step decode: C steps in one `lax.scan`.
+
+        The paper's TEPL extension removes per-invocation synchronization
+        between the core and DECA (§5); this is the serving-loop analog —
+        the host round-trip (token sync + numpy batch assembly) moves off
+        the per-token path onto the per-chunk path. Sampled tokens feed
+        back on device; per-slot done flags (EOS / length cap) are computed
+        on device and route the writes of finished slots to the null page,
+        so the KV pool is bitwise what C single steps would have produced.
+
+        `sample_fn(logits (B, V), step j) -> tokens (B,)` is supplied by
+        the engine (it owns keys/temperature). Returns (tokens (C, B),
+        new cache). Tokens past a slot's done point are junk the host
+        discards when it replays the chunk against request state.
+        """
+        def body(carry, xs):
+            pools, tok, done, j = carry
+            pos, wslot, wpos, fresh = xs
+            # finished (or inactive) slots write to the null page with the
+            # empty sentinel — identical to the single-step inactive path
+            wslot = jnp.where(done[:, None], 0, wslot)
+            wpos = jnp.where(done[:, None], L.CACHE_EMPTY_POS, wpos)
+            if self.cfg.mrope_sections:
+                pos = jnp.broadcast_to(pos, (3,) + pos.shape)
+            logits, pools = self.decode_step_paged(
+                params, tok, pos, pools, block_tables, wslot, wpos, fresh
+            )
+            t = sample_fn(logits, j).astype(jnp.int32)
+            done = done | (j + 1 >= max_steps) | (t == eos_ids)
+            return (pools, t[:, None], done, j + 1), t
+
+        done0 = ~active
+        carry0 = (cache, tokens0, done0, jnp.zeros((), jnp.int32))
+        (new_cache, _, _, _), toks = jax.lax.scan(
+            body, carry0, (positions, write_slots, write_pos, fresh_pages)
+        )
+        return toks, new_cache

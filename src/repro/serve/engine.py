@@ -67,12 +67,18 @@ def make_decode_step(model: Model) -> Callable:
 
 
 def make_paged_prefill_step(model: Model) -> Callable:
-    """paged_prefill(params, tokens (1,Sp), positions, cache, block_tables,
-    write_slots, write_pos, fresh_pages) -> (logits (1,Sp,V), cache). One
-    jit shape per page-rounded prompt length (<= max_blocks shapes total)."""
+    """paged_prefill(params, tokens (B,Sp), positions, cache, block_tables,
+    write_slots, write_pos, fresh_pages, last_idx (B,)) -> (last-token
+    logits (B,V), cache).
+
+    Batched: every request admitted in a scheduling round prefills in one
+    call (the scheduler buckets B to a power of two and Sp to the round's
+    max page-rounded length, bounding the jit-shape count). Each row's last
+    real token is gathered on device — only the (B, V) logits rows the
+    sampler needs ever leave the forward pass."""
 
     def paged_prefill(params, tokens, positions, cache, tables, slots, wpos,
-                      fresh):
+                      fresh, last_idx):
         logits, new_cache, _ = model.forward(
             params, tokens=tokens, positions=positions, cache=cache,
             paged={
@@ -82,7 +88,8 @@ def make_paged_prefill_step(model: Model) -> Callable:
                 "fresh_pages": fresh,
             },
         )
-        return logits, new_cache
+        last = jnp.take_along_axis(logits, last_idx[:, None, None], axis=1)
+        return last[:, 0], new_cache
 
     return paged_prefill
 
@@ -99,6 +106,45 @@ def make_paged_decode_step(model: Model) -> Callable:
         )
 
     return paged_step
+
+
+def sample_rows_keyed(key, rids, steps, logits, temp):
+    """Per-row sampling keyed on (request id, token index) — THE key
+    derivation, shared by the host-side sampler and the device-resident
+    chunk sampler. The chunked == single-step token-reproducibility
+    guarantee rests on both paths calling this one function."""
+    def one(rid, step, row):
+        k = jax.random.fold_in(jax.random.fold_in(key, rid), step)
+        return jax.random.categorical(k, row / temp)
+
+    return jax.vmap(one)(rids, steps, logits)
+
+
+def make_paged_decode_chunk_step(model: Model) -> Callable:
+    """Device-resident multi-step decode (DESIGN.md §12): C steps of
+    `decode_step_paged` inside one `lax.scan`, with sampling, token
+    feedback, and EOS/length-cap done flags all on device. One jit
+    specialization per (C, F) bucket; `greedy` is static because it
+    changes the sampler's structure, `temp`/`key` stay traced."""
+
+    @functools.partial(jax.jit, static_argnames=("greedy",))
+    def chunk_step(params, cache, tokens0, tables, positions, wslots, wpos,
+                   fresh, rids, start_steps, max_steps, eos, active, temp,
+                   key, *, greedy):
+        def sample(logits, j):
+            logits = logits.astype(jnp.float32)
+            if greedy:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            steps = start_steps + j.astype(jnp.uint32)
+            out = sample_rows_keyed(key, rids, steps, logits, temp)
+            return out.astype(jnp.int32)
+
+        return model.decode_chunk_paged(
+            params, tokens0, cache, tables, positions, wslots, wpos, fresh,
+            sample_fn=sample, max_steps=max_steps, eos_ids=eos, active=active,
+        )
+
+    return chunk_step
 
 
 class GenerationEngine:
@@ -131,6 +177,13 @@ class GenerationEngine:
     encode-on-write, dequantize-on-read, per-(slot, head) bf16 scales for
     scaled codecs, in both the paged pool and the dense ring cache. Default
     is the model config's `kv_quant`.
+
+    `decode_chunk` (DESIGN.md §12) runs up to that many decode steps inside
+    one jitted `lax.scan` — sampling, token feedback, and EOS/length-cap
+    flags stay on device, and the host syncs once per chunk instead of once
+    per token. `decode_chunk=1` restores the single-step loop (the golden
+    reference in tests). `prefill_batch=False` likewise restores one jit
+    call per admitted request (the pre-PR4 baseline in benchmarks).
     """
 
     def __init__(
@@ -148,6 +201,8 @@ class GenerationEngine:
         max_slots: int = 4,
         num_blocks: Optional[int] = None,
         kv_quant: Optional[str] = None,
+        decode_chunk: int = 8,
+        prefill_batch: bool = True,
     ):
         if kv_quant is not None and kv_quant != model.cfg.kv_quant:
             # end-to-end kv_quant plumbing: the format name is a codec-
@@ -197,6 +252,7 @@ class GenerationEngine:
                 )
             self._paged_prefill = jax.jit(make_paged_prefill_step(model))
             self._paged_decode = jax.jit(make_paged_decode_step(model))
+            self._paged_decode_chunk = make_paged_decode_chunk_step(model)
             self.scheduler = Scheduler(
                 self.kv,
                 max_slots=max_slots,
@@ -204,6 +260,9 @@ class GenerationEngine:
                 prefill_fn=self._run_paged_prefill,
                 decode_fn=self._run_paged_decode,
                 sample_fn=self._sample_rows,
+                decode_chunk_fn=self._run_paged_decode_chunk,
+                chunk=max(1, decode_chunk),
+                prefill_batch=prefill_batch,
             )
 
     def _mesh_scope(self):
@@ -217,14 +276,7 @@ class GenerationEngine:
     # ------------------------------------------------------------------
     @functools.cached_property
     def _sampler(self):
-        def sample(key, rids, steps, logits, temp):
-            def one(rid, step, row):
-                k = jax.random.fold_in(jax.random.fold_in(key, rid), step)
-                return jax.random.categorical(k, row / temp)
-
-            return jax.vmap(one)(rids, steps, logits)
-
-        return jax.jit(sample)
+        return jax.jit(sample_rows_keyed)
 
     def _sample_rows(
         self, logits: jax.Array, rids: np.ndarray, steps: np.ndarray
@@ -250,7 +302,9 @@ class GenerationEngine:
             return jnp.broadcast_to(pos2d, (3,) + pos2d.shape)
         return pos2d
 
-    def _run_paged_prefill(self, tokens, positions, tables, slots, wpos, fresh):
+    def _run_paged_prefill(
+        self, tokens, positions, tables, slots, wpos, fresh, last_idx
+    ):
         with self._mesh_scope():
             logits, self.kv.pools = self._paged_prefill(
                 self.params,
@@ -261,6 +315,7 @@ class GenerationEngine:
                 jnp.asarray(slots),
                 jnp.asarray(wpos),
                 jnp.asarray(fresh),
+                jnp.asarray(last_idx),
             )
         return logits
 
@@ -277,6 +332,33 @@ class GenerationEngine:
                 jnp.asarray(fresh),
             )
         return logits
+
+    def _run_paged_decode_chunk(
+        self, tokens0, tables, positions, wslots, wpos, fresh,
+        rids, start_steps, max_steps, eos, active,
+    ):
+        """One device-resident chunk: only the sampled (C, M) token ids
+        cross back to host — a single synchronization per `chunk` tokens."""
+        with self._mesh_scope():
+            toks, self.kv.pools = self._paged_decode_chunk(
+                self.params,
+                self.kv.pools,
+                jnp.asarray(tokens0),
+                jnp.asarray(tables),
+                jnp.asarray(positions),
+                jnp.asarray(wslots),
+                jnp.asarray(wpos),
+                jnp.asarray(fresh),
+                jnp.asarray(rids, jnp.uint32),
+                jnp.asarray(start_steps, jnp.uint32),
+                jnp.asarray(max_steps, jnp.int32),
+                jnp.asarray(eos, jnp.int32),
+                jnp.asarray(active),
+                jnp.float32(self.temperature),
+                self._base_key,
+                greedy=self.temperature <= 0.0,
+            )
+        return np.asarray(toks)
 
     def submit(
         self,

@@ -1,23 +1,28 @@
 """Continuous-batching scheduler over the block-paged KV cache.
 
-Host-side control loop (DESIGN.md §10): a FIFO request queue feeds a fixed
-set of `max_slots` decode slots. Between decode steps the scheduler admits
-queued requests into free slots whenever the pool has enough unreserved
-pages for the request's worst case (prompt + max_new_tokens - 1 KV
-entries), prefills them one at a time (prompt padded to a page multiple —
-at most `max_blocks` distinct jit shapes), and evicts finished requests
-(EOS or length cap), returning their pages to the free list immediately so
-the next queued request can take the slot.
+Host-side control loop (DESIGN.md §10/§12): a FIFO request queue feeds a
+fixed set of `max_slots` decode slots. Each scheduling round the host
+admits queued requests into free slots whenever the pool has enough
+unreserved pages for the request's worst case, prefills **all requests
+admitted in the round in one bucketed-shape call** (batch rounded to a
+power of two, prompt span to the round's max page count), and then runs
+**up to `chunk` decode steps inside one jitted `lax.scan`** — sampled
+tokens feed back on device, per-slot done flags (EOS / length cap) are
+computed on device, and block-table / write-slot advancement is
+precomputed for the whole chunk. The host only touches admission and
+eviction between chunks: one device→host synchronization per `chunk`
+tokens instead of one per token (the TEPL analogy, DESIGN.md §12).
 
-The decode step itself stays a fixed-shape jitted function over all
-`max_slots` slots: inactive slots feed token 0 at position 0, write to the
-null page, and their logits are ignored — the standard
-continuous-batching-on-XLA compromise, now without per-request max_len
-padding.
+The decode step itself stays fixed-shape over all `max_slots` slots:
+inactive slots feed token 0 at position 0, write to the null page, and
+their logits are ignored — the standard continuous-batching-on-XLA
+compromise, now without per-request max_len padding.
 
 Sampling is per-request: `sample_fn(logits, rids, steps)` keys on
 (request id, token index) only, so admission order and batch composition
-can never change a request's sampled tokens.
+can never change a request's sampled tokens. Inactive / padding rows carry
+rid -1 (an unreachable uint32 sentinel), so their junk draws can never
+collide with a real request's key stream.
 """
 from __future__ import annotations
 
@@ -30,6 +35,10 @@ import numpy as np
 
 from repro.models.layers import CACHE_EMPTY_POS
 from repro.serve.paged_cache import PagedKVCache
+
+
+def _pow2ceil(x: int) -> int:
+    return 1 << max(0, x - 1).bit_length()
 
 
 @dataclasses.dataclass
@@ -49,14 +58,21 @@ class Request:
 class Scheduler:
     """Request queue + admission/eviction around jitted prefill/decode fns.
 
-    prefill_fn(tokens (1,Sp), positions (1,Sp), block_tables (1,MB),
-               write_slots (1,Sp), write_pos (1,Sp), fresh (Sp/bs,))
-               -> logits (1, Sp, V)
+    prefill_fn(tokens (B,Sp), positions (B,Sp), block_tables (B,MB),
+               write_slots (B,Sp), write_pos (B,Sp), fresh (F,),
+               last_idx (B,)) -> last-token logits (B, V) on device
     decode_fn(tokens (M,1), positions (M,1), block_tables (M,MB),
               write_slots (M,1), write_pos (M,1), fresh (M,)) -> logits (M, V)
+    decode_chunk_fn(tokens0 (M,1), tables (M,MB), positions (C,M,1),
+                    write_slots (C,M,1), write_pos (C,M,1), fresh (C,F),
+                    rids (M,), start_steps (M,), max_steps (M,), eos (M,),
+                    active (M,)) -> np tokens (C, M)
     sample_fn(logits (N,V) on device, rids (N,), steps (N,)) -> np tokens (N,)
 
-    Logits stay on device end-to-end; only sampled token ids cross to host.
+    With `chunk` > 1 and a `decode_chunk_fn`, decode runs device-resident:
+    logits, sampling, and EOS/length-cap checks never leave the device
+    inside a chunk — only the (C, M) sampled token ids cross to host, once
+    per chunk.
     """
 
     def __init__(
@@ -68,14 +84,24 @@ class Scheduler:
         prefill_fn: Callable,
         decode_fn: Callable,
         sample_fn: Callable,
+        decode_chunk_fn: Optional[Callable] = None,
+        chunk: int = 1,
+        prefill_batch: bool = True,
     ):
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        if chunk > 1 and decode_chunk_fn is None:
+            raise ValueError("chunk > 1 requires a decode_chunk_fn")
         self.cache = cache
         self.max_slots = max_slots
         self.max_len = max_len
         self.max_blocks = math.ceil(max_len / cache.block_size)
         self._prefill = prefill_fn
         self._decode = decode_fn
+        self._decode_chunk = decode_chunk_fn
         self._sample = sample_fn
+        self.chunk = chunk
+        self.prefill_batch = prefill_batch
         self.queue: collections.deque = collections.deque()
         self.slots: List[Optional[Request]] = [None] * max_slots
         self.results: Dict[int, np.ndarray] = {}
@@ -83,8 +109,10 @@ class Scheduler:
         self._next_rid = 0
         # occupancy / padding-waste accounting (benchmarks/run.py serving_paged)
         self._stats = {
-            "decode_steps": 0, "active_slot_steps": 0,
+            "decode_steps": 0, "decode_chunks": 0, "active_slot_steps": 0,
             "paged_block_steps": 0, "dense_block_steps": 0, "peak_blocks": 0,
+            "prefill_calls": 0, "prefill_token_steps": 0,
+            "prefill_real_tokens": 0,
         }
 
     # ------------------------------------------------------------------
@@ -128,7 +156,7 @@ class Scheduler:
         return out
 
     # ------------------------------------------------------------------
-    # one scheduling round: admission -> prefill -> batched decode
+    # one scheduling round: admission -> batched prefill -> chunked decode
     # ------------------------------------------------------------------
     def step(self) -> None:
         self._admit()
@@ -138,6 +166,7 @@ class Scheduler:
         return len(r.prompt) + r.max_new_tokens - 1
 
     def _admit(self) -> None:
+        admitted: List[tuple] = []
         for slot in range(self.max_slots):
             if self.slots[slot] is not None or not self.queue:
                 continue
@@ -147,43 +176,96 @@ class Scheduler:
             self.queue.popleft()
             self.cache.admit(r.rid, self._kv_len(r))
             self.slots[slot] = r
-            self._prefill_request(r)
-            if self._finished(r):
-                self._evict(slot)
+            admitted.append((slot, r))
+        if admitted:
+            if self.prefill_batch:
+                self._prefill_batch(admitted)
+            else:
+                # legacy pre-PR4 behavior (kept as the benchmark baseline):
+                # one jit call per admitted request, exact page rounding
+                for one in admitted:
+                    self._prefill_batch([one], bucketed=False)
+            for slot, r in admitted:
+                if self._finished(r):
+                    self._evict(slot)
 
-    def _prefill_request(self, r: Request) -> None:
+    def _prefill_batch(self, admitted: List[tuple], bucketed: bool = True) -> None:
+        """One bucketed-shape prefill for every request admitted this round.
+
+        Batch is padded to a power of two (<= max_slots) and the prompt
+        span to the round's max page-rounded length (<= max_blocks page
+        shapes, as before), so the jit-shape count stays
+        O(log(max_slots) * max_blocks) instead of one compile per (batch,
+        length) pair. Padding rows write to the null page under the
+        empty-position sentinel and sample with rid -1."""
         bs = self.cache.block_size
-        p = len(r.prompt)
-        sp = math.ceil(p / bs) * bs
-        tokens = np.zeros((1, sp), np.int32)
-        tokens[0, :p] = r.prompt
-        positions = np.arange(sp, dtype=np.int32)[None]
-        write_pos = np.full((1, sp), CACHE_EMPTY_POS, np.int32)
-        write_pos[0, :p] = np.arange(p, dtype=np.int32)
-        write_slots = np.empty((1, sp), np.int32)
-        write_slots[0, :p] = self.cache.write_slots(r.rid, 0, p)
-        write_slots[0, p:] = self.cache.null_slots(np.arange(p, sp))
-        fresh = self.cache.drain_fresh(sp // bs)
-        table = self.cache.block_table_row(r.rid, self.max_blocks)[None]
-        logits = self._prefill(
-            tokens, positions, table, write_slots, write_pos, fresh
+        n = len(admitted)
+        max_pages = max(
+            math.ceil(len(r.prompt) / bs) for _, r in admitted
         )
-        # slice the last real token's row on device — only (1, V) leaves it
-        tok = self._sample(logits[:, p - 1, :], np.array([r.rid]), np.array([0]))
-        r.out.append(int(tok[0]))
-        r.peak_blocks = max(r.peak_blocks, self.cache.blocks_held(r.rid))
+        if bucketed:
+            # batch rides power-of-two buckets; the prompt span stays at the
+            # exact page count (<= max_blocks shapes, same as the per-request
+            # path) — padding rows are cheap, padded columns are not
+            b = min(_pow2ceil(n), self.max_slots)
+        else:
+            b = n
+        pages = max_pages
+        sp = pages * bs
 
+        tokens = np.zeros((b, sp), np.int32)
+        positions = np.broadcast_to(
+            np.arange(sp, dtype=np.int32), (b, sp)
+        ).copy()
+        write_pos = np.full((b, sp), CACHE_EMPTY_POS, np.int32)
+        write_slots = np.broadcast_to(
+            self.cache.null_slots(np.arange(sp)), (b, sp)
+        ).copy()
+        tables = np.zeros((b, self.max_blocks), np.int32)
+        last_idx = np.zeros(b, np.int32)
+        rids = np.full(b, -1, np.int64)
+        for row, (_, r) in enumerate(admitted):
+            p = len(r.prompt)
+            tokens[row, :p] = r.prompt
+            write_pos[row, :p] = np.arange(p, dtype=np.int32)
+            write_slots[row, :p] = self.cache.write_slots(r.rid, 0, p)
+            tables[row] = self.cache.block_table_row(r.rid, self.max_blocks)
+            last_idx[row] = p - 1
+            rids[row] = r.rid
+        fresh = self.cache.drain_fresh(b * pages)
+        logits = self._prefill(
+            tokens, positions, tables, write_slots, write_pos, fresh, last_idx
+        )
+        toks = self._sample(logits, rids, np.zeros(b, np.int64))
+        for row, (_, r) in enumerate(admitted):
+            r.out.append(int(toks[row]))
+            r.peak_blocks = max(r.peak_blocks, self.cache.blocks_held(r.rid))
+
+        st = self._stats
+        st["prefill_calls"] += 1
+        st["prefill_token_steps"] += b * sp
+        st["prefill_real_tokens"] += sum(len(r.prompt) for _, r in admitted)
+
+    # ------------------------------------------------------------------
+    # decode: single-step (chunk == 1) or device-resident chunk
+    # ------------------------------------------------------------------
     def _decode_active(self) -> None:
         active = [(i, r) for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return
+        if self.chunk > 1:
+            self._decode_active_chunked(active)
+        else:
+            self._decode_active_single(active)
+
+    def _decode_active_single(self, active) -> None:
         m, mb = self.max_slots, self.max_blocks
         tokens = np.zeros((m, 1), np.int32)
         positions = np.zeros((m, 1), np.int32)
         write_pos = np.full((m, 1), CACHE_EMPTY_POS, np.int32)
         write_slots = np.zeros((m, 1), np.int32)  # null page, offset 0
         tables = np.zeros((m, mb), np.int32)
-        rids = np.zeros(m, np.int64)
+        rids = np.full(m, -1, np.int64)  # -1: unreachable uint32 sentinel
         steps = np.zeros(m, np.int64)
         for i, r in active:
             pos = r.next_pos - 1  # feed back the last sampled token
@@ -203,17 +285,133 @@ class Scheduler:
             r.out.append(int(toks[i]))
             r.peak_blocks = max(r.peak_blocks, self.cache.blocks_held(r.rid))
 
-        st = self._stats
-        st["decode_steps"] += 1
-        st["active_slot_steps"] += len(active)
-        used = self.cache.allocator.used_count
-        st["paged_block_steps"] += used
-        st["dense_block_steps"] += len(active) * self.max_blocks
-        st["peak_blocks"] = max(st["peak_blocks"], used)
+        self._account_decode(1, len(active))
 
         for i, r in active:
             if self._finished(r):
                 self._evict(i)
+
+    def _decode_active_chunked(self, active) -> None:
+        """Precompute a whole chunk's slot/position advancement, run it as
+        one device-resident scan, then replay the sampled tokens against
+        host request state (EOS / length caps are also computed on device;
+        the replay only decides how many of the C tokens each slot keeps)."""
+        m, mb, bs = self.max_slots, self.max_blocks, self.cache.block_size
+        rem = {i: r.max_new_tokens - len(r.out) for i, r in active}
+        c = min(self.chunk, _pow2ceil(max(rem.values())))
+        f = m * ((c + bs - 1) // bs + 1)  # fresh-page bound for the chunk
+
+        # snapshot page state before the chunk pre-allocates, so the
+        # accounting below can replay the single-step charging order
+        used0 = self.cache.allocator.used_count
+        held0 = {i: self.cache.blocks_held(r.rid) for i, r in active}
+        p0s: Dict[int, int] = {}
+
+        tokens0 = np.zeros((m, 1), np.int32)
+        positions = np.zeros((c, m, 1), np.int32)
+        write_slots = np.zeros((c, m, 1), np.int32)
+        write_pos = np.full((c, m, 1), CACHE_EMPTY_POS, np.int32)
+        tables = np.zeros((m, mb), np.int32)
+        rids = np.full(m, -1, np.int64)
+        start_steps = np.zeros(m, np.int64)
+        max_steps = np.zeros(m, np.int32)
+        eos = np.full(m, -1, np.int32)
+        act = np.zeros(m, bool)
+        for i, r in active:
+            p0 = p0s[i] = r.next_pos - 1
+            si = min(c, rem[i])
+            tokens0[i, 0] = r.out[-1]
+            rids[i] = r.rid
+            start_steps[i] = len(r.out)
+            max_steps[i] = si
+            act[i] = True
+            if r.eos_id is not None:
+                eos[i] = r.eos_id
+            # pre-allocate the chunk's pages now; the device table is
+            # static for the whole chunk (future slots are scrubbed-empty
+            # and mask to zero attention weight until written)
+            slots_i = self.cache.write_slots(r.rid, p0, si)
+            positions[:, i, 0] = p0 + np.arange(c)
+            write_slots[:si, i, 0] = slots_i
+            write_pos[:si, i, 0] = p0 + np.arange(si)
+        for i, r in active:
+            tables[i] = self.cache.block_table_row(r.rid, mb)
+        fresh = np.zeros((c, f), np.int32)
+        fresh[0] = self.cache.drain_fresh(f)
+
+        toks = self._decode_chunk(
+            tokens0, tables, positions, write_slots, write_pos, fresh,
+            rids, start_steps, max_steps, eos, act,
+        )  # (c, m) np.int32
+
+        steps_taken: Dict[int, int] = {}
+        for i, r in active:
+            for j in range(int(max_steps[i])):
+                r.out.append(int(toks[j, i]))
+                if self._finished(r):
+                    break
+            steps_taken[i] = len(r.out) - int(start_steps[i])
+            r.peak_blocks = max(r.peak_blocks, self.cache.blocks_held(r.rid))
+
+        self._account_decode_chunk(active, steps_taken, used0, held0, p0s, c)
+
+        for i, r in active:
+            if self._finished(r):
+                self._evict(i)
+
+    def _account_decode_chunk(
+        self,
+        active,
+        steps_taken: Dict[int, int],
+        used0: int,
+        held0: Dict[int, int],
+        p0s: Dict[int, int],
+        c: int,
+    ) -> None:
+        """Replay the single-step charging order over the chunk: a page is
+        charged from the step its first token lands and released the step
+        its request finishes — even though the chunk pre-allocates pages up
+        front and evicts at the boundary. Charging the end-of-chunk
+        `used_count` for all c steps would overstate paged_block_steps as a
+        function of chunk size, making padding-waste stats non-comparable
+        between chunk settings."""
+        st = self._stats
+        st["decode_chunks"] += 1
+        bs = self.cache.block_size
+        used = used0
+        grown = dict.fromkeys(held0, 0)  # pages newly landed per slot
+        for j in range(c):
+            live = [i for i, _ in active if j < steps_taken[i]]
+            if not live:
+                # dead tail of the chunk (EOS drained every slot): the scan
+                # did run these steps, but counting them would make
+                # decode_steps — and every per-step stat derived from it —
+                # a function of the chunk setting
+                break
+            st["decode_steps"] += 1
+            for i in live:
+                if (p0s[i] + j) % bs == 0:
+                    used += 1
+                    grown[i] += 1
+            st["active_slot_steps"] += len(live)
+            st["paged_block_steps"] += used
+            st["dense_block_steps"] += len(live) * self.max_blocks
+            st["peak_blocks"] = max(st["peak_blocks"], used)
+            for i, r in active:
+                if steps_taken[i] == j + 1 and self._finished(r):
+                    used -= held0[i] + grown[i]
+
+    def _account_decode(self, steps: int, slot_steps: int) -> None:
+        st = self._stats
+        st["decode_steps"] += steps
+        st["decode_chunks"] += 1
+        st["active_slot_steps"] += slot_steps
+        used = self.cache.allocator.used_count
+        st["paged_block_steps"] += used * steps
+        # what a max_len ring cache would have held for the same work:
+        # max_blocks pages per active slot-step
+        st["dense_block_steps"] += slot_steps * self.max_blocks
+        st["peak_blocks"] = max(st["peak_blocks"], used)
 
     def _finished(self, r: Request) -> bool:
         return len(r.out) >= r.max_new_tokens or (
@@ -239,6 +437,11 @@ class Scheduler:
         # fraction of block-steps a max_len ring cache would have held that
         # the paged pool never allocated
         st["padding_waste_saved"] = 1.0 - st["paged_block_steps"] / dense
+        # prefill accounting: padded token-steps actually launched vs real
+        # prompt tokens — occupancy stats no longer overstate efficiency
+        # for prompt-heavy traffic
+        padded = max(1, st["prefill_token_steps"])
+        st["prefill_padding_waste"] = 1.0 - st["prefill_real_tokens"] / padded
         # codec-driven KV footprint: pool bytes per token slot (all layers),
         # so a quantized kv_quant shows its byte saving next to the paging
         # stats

@@ -69,6 +69,80 @@ def test_decompress_output_dtype():
     assert out.dtype == jnp.bfloat16
 
 
+# ---------------------------------------------------------------------------
+# block geometry: divisor selection + roofline autotune (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def test_select_block_picks_largest_divisor():
+    from repro.kernels.autotune import select_block
+
+    assert select_block(256, 200, multiple=128) == 128
+    assert select_block(96, 256) == 96          # clamped to the dim
+    assert select_block(224, 112) == 112
+    assert select_block(32, 16, multiple=32) == 16  # falls back: no aligned div
+    # odd dims: the old decrement loop silently produced tiny blocks; the
+    # divisor selection is exact and O(sqrt n)
+    assert select_block(97, 64) == 1
+    # a minimum (block_k's group clamp) lifts an undersized target
+    assert select_block(256, 16, multiple=32, minimum=32) == 32
+
+
+def test_select_block_warns_on_non_lane_aligned():
+    import warnings as w
+
+    from repro.kernels.autotune import select_block
+
+    with pytest.warns(UserWarning, match="128-lane"):
+        select_block(131, 64, warn_lanes=True)  # prime >= 128: only 1 fits
+    with w.catch_warnings():
+        w.simplefilter("error")
+        # lane-aligned choices must stay silent...
+        assert select_block(1024, 512, multiple=128, warn_lanes=True) == 512
+        # ...and so must dims below 128, which have no aligned option at all
+        assert select_block(96, 64, warn_lanes=True) == 48
+
+
+def test_odd_n_kernel_still_matches_oracle():
+    """Prime N used to shrink block_n to a non-lane-aligned sliver silently;
+    now it warns but stays correct (the whole dim becomes one block)."""
+    k, n = 64, 131
+    _, ct = _compress(k, n, "bf8_50", seed=3)
+    want = ref.decompress(ct, out_dtype=jnp.float32)
+    with pytest.warns(UserWarning, match="128-lane"):
+        got = decompress_pallas(ct, out_dtype=jnp.float32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_undersized_block_k_clamps_to_group():
+    """Regression: an explicit block_k below the compression group used to
+    clamp to G via max(G, ...); divisor selection must keep that floor
+    instead of producing a zero-group BlockSpec."""
+    k, n = 256, 96
+    _, ct = _compress(k, n, "bf8_50", seed=5)
+    want = ref.decompress(ct, out_dtype=jnp.float32)
+    got = decompress_pallas(ct, block_k=16, out_dtype=jnp.float32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    x = jnp.asarray(
+        np.random.default_rng(6).standard_normal((8, k)), jnp.float32
+    )
+    want_g = ref.decompress_gemm(x, ct)
+    got_g = decompress_gemm_pallas(x, ct, block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_g), np.asarray(want_g), atol=1e-4)
+
+
+def test_pick_blocks_regimes():
+    from repro.kernels.autotune import pick_blocks
+
+    spec = get_spec("bf8_50")
+    # decode GeMV regime: M below sublane granularity stays whole
+    bm, bn, bk = pick_blocks(4, 1024, 4096, spec)
+    assert bm == 4 and bn % 128 == 0 and bk % spec.group == 0
+    # prefill GeMM regime: MXU-aligned tiles
+    bm, bn, bk = pick_blocks(256, 1024, 4096, spec)
+    assert bm % 8 == 0 and bn % 128 == 0 and bk % spec.group == 0
+    assert 1024 % bn == 0 and 4096 % bk == 0 and 256 % bm == 0
+
+
 def test_bf8_alu_decode_equals_lut_decode():
     """The registry's ALU bit-twiddle decode (the one implementation both
     ref.py and the Pallas kernels use) must agree with the numpy
