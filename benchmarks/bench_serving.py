@@ -10,11 +10,20 @@ the device-resident chunked loop (DESIGN.md §12) — same model, same
 compressed weights, same mixed-length traffic, max_slots >= 8. The
 before/after numbers are committed in BENCH_PR4.json and guarded by
 benchmarks/check_regression.py.
+
+`bench_paged_attention_decode` is the PR 5 deliverable: decode tokens/sec
+at long contexts (prompts >= 512 in a max_len-4096 pool) with the PR 4
+gather-read attention (`paged_gather_kv` decodes and materializes all
+max_blocks pages per token) vs the fused length-bounded page walk
+(DESIGN.md §13). Committed in BENCH_PR5.json, guarded by the same script;
+the per-token KV bytes actually read vs the max_blocks worst case ride
+along from `Scheduler.stats()`.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 import numpy as np
 import jax
@@ -97,31 +106,41 @@ def _decode_tok_s(chunk: int, *, legacy: bool = False, max_slots: int = 8,
         rng.integers(0, cfg.vocab_size, n).astype(np.int32) for n in lengths
     ]
     orig_gemv = ops.GEMV_MAX_M
+    orig_fused = ops.PAGED_ATTENTION_FUSED
     if legacy:
         ops.GEMV_MAX_M = -1  # every compressed matmul materializes (K, N)
+        ops.PAGED_ATTENTION_FUSED = False  # gather-read decode attention
     try:
         engine = GenerationEngine(
             model, cparams, max_len=128, block_size=16, max_slots=max_slots,
             decode_chunk=chunk, prefill_batch=not legacy,
         )
         _serve_workload(engine, prompts, n_steps)  # warmup: compile buckets
-        return max(
+        best = max(
             _serve_workload(engine, prompts, n_steps) for _ in range(reps)
         )
+        return best, engine.scheduler.stats()
     finally:
         ops.GEMV_MAX_M = orig_gemv
+        ops.PAGED_ATTENTION_FUSED = orig_fused
 
 
 def decode_throughput_results(chunk: int = 16, **kw) -> Dict[str, float]:
     """Before/after numbers for BENCH_PR4.json and check_regression.py."""
-    before = _decode_tok_s(1, legacy=True, **kw)  # the pre-PR4 serving loop
-    after = _decode_tok_s(chunk, **kw)            # device-resident chunks
+    before, _ = _decode_tok_s(1, legacy=True, **kw)  # the pre-PR4 loop
+    after, st = _decode_tok_s(chunk, **kw)           # device-resident chunks
     return {
         "decode_tok_s_before": round(before, 2),
         "decode_tok_s_after": round(after, 2),
         "speedup": round(after / before, 3),
         "chunk": chunk,
         "max_slots": kw.get("max_slots", 8),
+        # §13 observability: bytes the decode attention actually streamed
+        # per token (length-bounded walk) vs the max_blocks worst case
+        "kv_read_kb_per_token": round(st["kv_read_bytes_per_token"] / 1024, 2),
+        "kv_read_kb_per_token_worst": round(
+            st["kv_read_bytes_per_token_worst"] / 1024, 2
+        ),
     }
 
 
@@ -135,9 +154,109 @@ def decode_row(res: Dict[str, float]) -> Dict[str, str]:
         f"tok_s_before={res['decode_tok_s_before']} "
         f"tok_s_after={res['decode_tok_s_after']} "
         f"speedup={res['speedup']}x chunk={res['chunk']} "
-        f"max_slots={res['max_slots']}",
+        f"max_slots={res['max_slots']} "
+        f"kv_read_kb_tok={res['kv_read_kb_per_token']} "
+        f"kv_worst_kb_tok={res['kv_read_kb_per_token_worst']}",
     )
 
 
 def bench_decode_throughput() -> List[Dict[str, str]]:
     return [decode_row(decode_throughput_results())]
+
+
+# ---------------------------------------------------------------------------
+# PR 5 fused paged-attention deliverable: long-context decode
+# ---------------------------------------------------------------------------
+
+def _drain_decode_tok_s(engine, prompts, n_steps: int) -> float:
+    """Decode tokens/sec with prefill excluded: the first scheduler step
+    (admission + batched prefill + first decode chunk) is warm-up; the
+    remaining pure-decode rounds are timed. This is the per-token hot path
+    the fused page walk targets — prefill keeps the gather-read path by
+    design (chunked prefill is a separate ROADMAP item)."""
+    sch = engine.scheduler
+    for p in prompts:
+        engine.submit(p, max_new_tokens=n_steps)
+    sch.step()  # admission + prefill + first chunk (untimed)
+    decoded0 = sch.stats()["active_slot_steps"]
+    t0 = time.perf_counter()
+    while sch.queue or any(r is not None for r in sch.slots):
+        sch.step()
+    dt = time.perf_counter() - t0
+    sch.results.clear()
+    return (sch.stats()["active_slot_steps"] - decoded0) / dt
+
+
+def _long_ctx_tok_s(
+    fused: bool, *, n_requests: int = 4, n_steps: int = 48,
+    prompt_len: int = 512, max_len: int = 4096, reps: int = 2,
+) -> Tuple[float, Dict[str, float]]:
+    """Decode tokens/sec at long contexts. `fused=False` reproduces the
+    PR 4 attention hot path exactly (gather-read: every decode token
+    decodes and materializes all max_blocks pages); `fused=True` is the
+    §13 length-bounded fused walk. Weights stay dense — the KV stream is
+    the subject. Returns (tok/s, scheduler stats)."""
+    from repro.kernels import ops
+
+    cfg = dataclasses.replace(
+        get_smoke_config("llama3-8b"),
+        d_model=128, n_heads=8, n_kv_heads=4, d_head=32, d_ff=256,
+        kv_quant="bf8",
+    )
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+        for n in rng.integers(prompt_len, prompt_len + 129, n_requests)
+    ]
+    prev = ops.PAGED_ATTENTION_FUSED
+    ops.PAGED_ATTENTION_FUSED = fused
+    try:
+        engine = GenerationEngine(
+            model, params, max_len=max_len, block_size=32, max_slots=4,
+            decode_chunk=8,
+        )
+        _drain_decode_tok_s(engine, prompts, n_steps)  # warmup: compile
+        best = max(
+            _drain_decode_tok_s(engine, prompts, n_steps) for _ in range(reps)
+        )
+        return best, engine.scheduler.stats()
+    finally:
+        ops.PAGED_ATTENTION_FUSED = prev
+
+
+def paged_attention_results(**kw) -> Dict[str, float]:
+    """Before/after numbers for BENCH_PR5.json and check_regression.py."""
+    before, _ = _long_ctx_tok_s(False, **kw)
+    after, st = _long_ctx_tok_s(True, **kw)
+    return {
+        "decode_tok_s_before": round(before, 2),
+        "decode_tok_s_after": round(after, 2),
+        "speedup": round(after / before, 3),
+        "kv_read_mb_per_token": round(st["kv_read_bytes_per_token"] / 2**20, 3),
+        "kv_read_mb_per_token_worst": round(
+            st["kv_read_bytes_per_token_worst"] / 2**20, 3
+        ),
+        "prompt_len": kw.get("prompt_len", 512),
+        "max_len": kw.get("max_len", 4096),
+    }
+
+
+def paged_attention_row(res: Dict[str, float]) -> Dict[str, str]:
+    """CSV row shared by `benchmarks/run.py paged_attention` and
+    check_regression's --csv-append (one measurement, two consumers)."""
+    return row(
+        "paged_attention_decode",
+        0.0,
+        f"tok_s_before={res['decode_tok_s_before']} "
+        f"tok_s_after={res['decode_tok_s_after']} "
+        f"speedup={res['speedup']}x "
+        f"kv_read_mb_tok={res['kv_read_mb_per_token']} "
+        f"kv_worst_mb_tok={res['kv_read_mb_per_token_worst']} "
+        f"prompt_len={res['prompt_len']} max_len={res['max_len']}",
+    )
+
+
+def bench_paged_attention_decode() -> List[Dict[str, str]]:
+    return [paged_attention_row(paged_attention_results())]

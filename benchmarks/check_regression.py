@@ -1,14 +1,22 @@
-"""Decode-throughput regression guard (CI; DESIGN.md §12 methodology).
+"""Named-benchmark regression guards (CI; DESIGN.md §12/§13 methodology).
 
-Re-runs the PR 4 decode-tokens/sec benchmark and compares against the
-committed BENCH_PR4.json baseline. Absolute tokens/sec is machine-bound, so
-the guard checks the machine-portable number: the *speedup* of the
-device-resident chunked loop over the legacy per-token serving loop, which
-must retain at least half the committed speedup (floor 1.2x). Exits
-non-zero on regression.
+Each manifest entry re-runs one serving benchmark and compares it against
+its committed baseline JSON. Absolute tokens/sec is machine-bound, so every
+guard checks the machine-portable number: the *speedup* of the optimized
+path over its in-tree baseline path, which must retain at least half the
+committed speedup (floor 1.2x). Exits non-zero on any regression.
 
-    python benchmarks/check_regression.py            # guard (CI)
-    python benchmarks/check_regression.py --update   # rewrite the baseline
+    python benchmarks/check_regression.py                   # all guards
+    python benchmarks/check_regression.py paged_attention   # one guard
+    python benchmarks/check_regression.py --update          # rewrite baselines
+
+Benchmarks:
+    decode_chunk     BENCH_PR4.json — device-resident chunked decode +
+                     batched prefill + decode-shaped GeMV vs the pre-PR4
+                     per-token serving loop (DESIGN.md §12)
+    paged_attention  BENCH_PR5.json — fused length-bounded paged-attention
+                     decode vs the gather-read attention at long contexts
+                     (prompts >= 512, DESIGN.md §13)
 """
 from __future__ import annotations
 
@@ -18,54 +26,103 @@ import pathlib
 import platform
 import sys
 
-BASELINE = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR4.json"
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _decode_chunk():
+    from benchmarks.bench_serving import decode_row, decode_throughput_results
+
+    return decode_throughput_results(), decode_row
+
+
+def _paged_attention():
+    from benchmarks.bench_serving import (
+        paged_attention_results, paged_attention_row,
+    )
+
+    return paged_attention_results(), paged_attention_row
+
+
+MANIFEST = {
+    "decode_chunk": {
+        "baseline": "BENCH_PR4.json",
+        "run": _decode_chunk,
+        "note": (
+            "decode tokens/sec, mixed-length traffic (prompts 8-48, 16 "
+            "requests, 24 new tokens, max_slots=8, mxfp4_100 weights); "
+            "before = pre-PR4 loop (per-request prefill, per-token host "
+            "sync, dense-materializing GeMM, gather-read attention), "
+            "after = batched prefill + device-resident chunked decode + "
+            "decode-shaped GeMV + fused paged attention"
+        ),
+    },
+    "paged_attention": {
+        "baseline": "BENCH_PR5.json",
+        "run": _paged_attention,
+        "note": (
+            "pure-decode tokens/sec at long contexts (prompts 512-640 in a "
+            "max_len-4096 / block_size-32 pool, 4 slots, 48 new tokens, "
+            "bf8 KV, dense weights; prefill excluded); before = PR 4 "
+            "gather-read attention (all max_blocks pages decoded and "
+            "materialized per token), after = fused dequantize-on-read "
+            "page walk bounded by each slot's used page count"
+        ),
+    },
+}
+
+
+def run_guard(name: str, *, update: bool, csv_append) -> bool:
+    """Measure one benchmark; True iff it passes (or was updated)."""
+    entry = MANIFEST[name]
+    path = REPO / entry["baseline"]
+    res, row_fn = entry["run"]()
+
+    if csv_append:
+        from benchmarks.common import csv_line
+
+        with open(csv_append, "a") as f:
+            f.write(csv_line(row_fn(res)) + "\n")
+
+    if update:
+        res["machine"] = platform.machine()
+        res["note"] = entry["note"]
+        path.write_text(json.dumps(res, indent=2) + "\n")
+        print(f"[{name}] wrote {path}: {res}")
+        return True
+
+    base = json.loads(path.read_text())
+    need = max(1.2, 0.5 * base["speedup"])
+    print(
+        f"[{name}] baseline: {base['decode_tok_s_before']} -> "
+        f"{base['decode_tok_s_after']} tok/s ({base['speedup']}x)\n"
+        f"[{name}] this run: {res['decode_tok_s_before']} -> "
+        f"{res['decode_tok_s_after']} tok/s ({res['speedup']}x)\n"
+        f"[{name}] required speedup: >= {need:.2f}x"
+    )
+    if res["speedup"] < need:
+        print(f"[{name}] REGRESSION: speedup fell below the guard")
+        return False
+    print(f"[{name}] OK")
+    return True
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
+    ap.add_argument("benchmarks", nargs="*", choices=[[], *MANIFEST],
+                    help="subset of guards to run (default: all)")
     ap.add_argument("--update", action="store_true",
-                    help="measure and rewrite BENCH_PR4.json")
-    ap.add_argument("--baseline", default=str(BASELINE))
+                    help="measure and rewrite the baseline JSONs")
     ap.add_argument("--csv-append", metavar="FILE",
-                    help="also append this run's numbers as a CSV row "
+                    help="also append each run's numbers as a CSV row "
                          "(benchmarks/run.py format) — the guard and the "
                          "artifact then share one measurement")
     args = ap.parse_args()
 
-    from benchmarks.bench_serving import decode_row, decode_throughput_results
-    from benchmarks.common import csv_line
-
-    res = decode_throughput_results()
-    if args.csv_append:
-        with open(args.csv_append, "a") as f:
-            f.write(csv_line(decode_row(res)) + "\n")
-    if args.update:
-        res["machine"] = platform.machine()
-        res["note"] = (
-            "decode tokens/sec, mixed-length traffic (prompts 8-48, 16 "
-            "requests, 24 new tokens, max_slots=8, mxfp4_100 weights); "
-            "before = pre-PR4 loop (per-request prefill, per-token host "
-            "sync, dense-materializing GeMM), after = batched prefill + "
-            "device-resident chunked decode + decode-shaped GeMV"
-        )
-        pathlib.Path(args.baseline).write_text(json.dumps(res, indent=2) + "\n")
-        print(f"wrote {args.baseline}: {res}")
-        return 0
-
-    base = json.loads(pathlib.Path(args.baseline).read_text())
-    need = max(1.2, 0.5 * base["speedup"])
-    print(
-        f"baseline: {base['decode_tok_s_before']} -> "
-        f"{base['decode_tok_s_after']} tok/s ({base['speedup']}x)\n"
-        f"this run: {res['decode_tok_s_before']} -> "
-        f"{res['decode_tok_s_after']} tok/s ({res['speedup']}x)\n"
-        f"required speedup: >= {need:.2f}x"
-    )
-    if res["speedup"] < need:
-        print("REGRESSION: chunked decode speedup fell below the guard")
-        return 1
-    print("OK")
-    return 0
+    names = args.benchmarks or list(MANIFEST)
+    ok = True
+    for name in names:
+        ok &= run_guard(name, update=args.update, csv_append=args.csv_append)
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

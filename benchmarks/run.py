@@ -29,6 +29,7 @@ ALL = [
     ("pallas_interpret", tf.bench_pallas_interpret_correctness),
     ("serving_paged", bs.bench_paged_serving),
     ("serving_decode", bs.bench_decode_throughput),
+    ("paged_attention", bs.bench_paged_attention_decode),
 ]
 
 

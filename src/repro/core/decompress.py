@@ -37,6 +37,13 @@ def use_impl(impl: str):
         _IMPL = prev
 
 
+def current_impl() -> str:
+    """The active kernel impl ('ref' | 'pallas') — also consulted by the
+    fused paged-attention routing in models/layers.py, so `use_impl`
+    switches every DECA kernel on the serving path at once."""
+    return _IMPL
+
+
 def mm(x: jax.Array, w: Any) -> jax.Array:
     """x (..., K) @ w (K, N) with transparent DECA decompression."""
     if isinstance(w, CompressedTensor):

@@ -18,7 +18,11 @@ This module provides:
   * DECA AI_XV model      — the paper's vOp + binomial-bubble model (§6.2),
   * BORD classification   — which factor bounds a kernel (paper §4.2),
   * the 4-term extension  — an ICI collective term for multi-chip TPU
-    execution (DESIGN.md §2): T = max(T_mem, T_vec, T_mtx, T_ici).
+    execution (DESIGN.md §2): T = max(T_mem, T_vec, T_mtx, T_ici),
+  * the KV-decode term    — `paged_attention_point` prices the decode-
+    attention KV stream (quantized page bytes, codec-decode vector ops,
+    QK/PV matrix ops) on the same surface, so the 3D roofline covers
+    attention as well as GeMM (DESIGN.md §13).
 """
 from __future__ import annotations
 
@@ -196,6 +200,19 @@ class SurfacePoint:
     rates: Dict[str, float]
 
 
+def _select_bound(rates: Dict[str, float]) -> Tuple[str, float]:
+    """BORD pick over {MEM, MTX, VEC} rates. Tie-break order MEM > MTX >
+    VEC (with a 0.1% tolerance): a balanced design (e.g. DECA {32,8},
+    whose PE ties the TMUL at one tile/16 cycles up to a vanishing bubble
+    expectation) counts as *not* VEC-bound, matching the paper's §9.2
+    saturation criterion. Shared by the GeMM surface (`evaluate`) and the
+    KV-decode surface (`paged_attention_point`) so the two can never
+    classify bounds inconsistently."""
+    floor = min(rates.values())
+    bound = next(k for k, v in rates.items() if v <= floor * 1.001)
+    return bound, rates[bound]
+
+
 def evaluate(
     spec: CompressionSpec,
     profile: HardwareProfile,
@@ -206,18 +223,12 @@ def evaluate(
     """Evaluate the Roof-Surface for one kernel signature."""
     xm = ai_xm(spec)
     xv = ai_xv if ai_xv is not None else software_ai_xv(spec)
-    # Tie-break order MEM > MTX > VEC (with a 0.1% tolerance): a balanced
-    # design (e.g. DECA {32,8}, whose PE ties the TMUL at one tile/16 cycles
-    # up to a vanishing bubble expectation) counts as *not* VEC-bound,
-    # matching the paper's §9.2 saturation criterion.
     rates = {
         "MEM": profile.mbw * xm,
         "MTX": profile.mos,
         "VEC": profile.vos * xv,
     }
-    floor = min(rates.values())
-    bound = next(k for k, v in rates.items() if v <= floor * 1.001)
-    tps = rates[bound]
+    bound, tps = _select_bound(rates)
     n_eff = min(batch_n, 16)
     return SurfacePoint(
         name=spec.name, ai_xm=xm, ai_xv=xv, tps=tps,
@@ -240,6 +251,82 @@ def bord_regions(profile: HardwareProfile) -> Dict[str, float]:
         "mem_mtx_x": profile.mos / profile.mbw,
         "vec_mtx_y": profile.mos / profile.vos,
     }
+
+
+# ---------------------------------------------------------------------------
+# KV-decode traffic: attention on the Roof-Surface (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def kv_bytes_per_token(kv_quant: str, hkv: int, dh: int) -> float:
+    """HBM bytes one cached token costs the decode-attention read stream:
+    K + V code planes, codec scale planes (one bf16 per (slot, head), K
+    and V), and the int32 position plane. Codec-metadata-driven like
+    `bytes_per_tile`, so a newly registered format is priced with no
+    changes here."""
+    if kv_quant in ("none", "", None):
+        per = 2 * hkv * dh * 2  # bf16 K + V
+    else:
+        codec = get_codec(kv_quant)
+        per = 2 * hkv * codec.kv_code_width(dh)
+        if codec.has_scale:
+            per += 2 * hkv * 2
+    return float(per + 4)
+
+
+def kv_decode_vops_per_token(kv_quant: str, hkv: int, dh: int) -> float:
+    """VPU element-ops to dequantize one token's K and V head vectors on
+    read. Byte-wide codes decode in ~1 op/element (shift + bitcast or
+    int cast), nibble-packed formats add the unpack (~2), and scaled
+    codecs one broadcast multiply — mirroring `software_vops_per_tile`'s
+    accounting for the weight stream."""
+    if kv_quant in ("none", "", None):
+        return 0.0
+    codec = get_codec(kv_quant)
+    per_elem = 1.0 if codec.bits >= 8 else 2.0
+    if codec.has_scale:
+        per_elem += 1.0
+    return 2.0 * hkv * dh * per_elem
+
+
+def paged_attention_point(
+    name: str,
+    *,
+    kv_quant: str,
+    hq: int,
+    hkv: int,
+    dh: int,
+    kv_len: int,
+    profile: HardwareProfile,
+    batch_n: int = 4,
+) -> SurfacePoint:
+    """Price one fused paged-attention decode step on the Roof-Surface.
+
+    The KV stream is the third traffic term next to the compressed-weight
+    stream (§4) and the ICI collective term: per decoded token a layer
+    reads `kv_len` quantized KV tokens (AI_XM over their bytes), spends
+    `kv_decode_vops_per_token` VPU ops dequantizing them (AI_XV), and
+    performs the QK^T + PV contractions (2 * kv_len * Hq * Dh FMAs,
+    expressed in 512-element tile ops so the same MOS applies). The
+    returned BORD bound says what the decode-attention kernel is limited
+    by — MEM for every format at production shapes, which is exactly why
+    dequantize-on-read (smaller codes = proportionally faster) wins."""
+    flops = 2.0 * kv_len * hq * dh  # QK^T + PV FMAs per decoded token
+    tiles = flops / TILE_ELEMS
+    kv_bytes = kv_len * kv_bytes_per_token(kv_quant, hkv, dh)
+    vops = kv_len * kv_decode_vops_per_token(kv_quant, hkv, dh)
+    xm = tiles / kv_bytes
+    xv = tiles / vops if vops else math.inf
+    rates = {
+        "MEM": profile.mbw * xm,
+        "MTX": profile.mos,
+        "VEC": profile.vos * xv if vops else math.inf,
+    }
+    bound, tps = _select_bound(rates)
+    return SurfacePoint(
+        name=name, ai_xm=xm, ai_xv=xv, tps=tps,
+        flops=FLOPS_PER_TILE_PER_BATCH * min(batch_n, 16) * tps,
+        bound=bound, rates=rates,
+    )
 
 
 # ---------------------------------------------------------------------------

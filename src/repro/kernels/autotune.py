@@ -1,7 +1,7 @@
 """Block-geometry selection for the DECA Pallas kernels, grounded on the
-§2 roofline mapping (DESIGN.md §2/§12).
+§2 roofline mapping (DESIGN.md §2/§12/§13).
 
-Two layers:
+Three layers:
 
   select_block(n, target, multiple)
       Largest divisor of `n` that is <= `target` (and a multiple of
@@ -25,6 +25,17 @@ Two layers:
       The block triple is shrunk (k first, then n — k only costs
       accumulator reuse, n costs lanes) until the VMEM working set fits the
       budget (double-buffered inputs + dense tile + f32 scratch).
+
+  pick_page_block(mb, block_size, hkv, dh, quant)
+      Pages per grid step of the fused paged-attention page walk
+      (kernels/paged_attention.py and the ref while-loop in kernels/ref.py,
+      DESIGN.md §13). Larger page blocks amortize the online-softmax
+      rescale and the per-step loop machinery; the cap is the VMEM working
+      set (double-buffered K/V codes + scale planes + position plane for
+      the block, plus the query and f32 accumulator). Always a divisor of
+      `mb`, and at most mb // 2 when mb splits at all — a single whole-walk
+      block would re-materialize the gathered KV view the fused path
+      exists to avoid.
 """
 from __future__ import annotations
 
@@ -140,3 +151,50 @@ def pick_blocks(
         else:  # pragma: no cover - tiny shapes always fit
             break
     return bm, bn, bk
+
+
+# ---------------------------------------------------------------------------
+# paged-attention page-block grid (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def kv_page_bytes(block_size: int, hkv: int, dh: int, quant: str = "none") -> int:
+    """HBM bytes one KV page costs the decode read stream. The per-token
+    formula (K + V code planes, codec scale planes, position plane) is the
+    roofline's — one accounting for pricing and VMEM sizing alike."""
+    from repro.core.roofsurface import kv_bytes_per_token
+
+    return int(block_size * kv_bytes_per_token(quant, hkv, dh))
+
+
+def pick_page_block(
+    mb: int,
+    block_size: int,
+    hkv: int,
+    dh: int,
+    quant: str = "none",
+    *,
+    hq: Optional[int] = None,
+    vmem_budget: int = VMEM_BUDGET,
+    target: int = 8,
+) -> int:
+    """Pages per step of the fused paged-attention page walk.
+
+    The walk is MEM-bound on the KV stream (the attention analog of the
+    decode GeMV regime): each block's bytes are fetched exactly once, so
+    the block size only trades online-softmax rescale overhead against
+    VMEM residency. Returns the largest divisor of `mb` that is <= `target`
+    and fits the budget — capped at mb // 2 whenever mb splits, so the
+    walk never degenerates into one whole-table block (which would
+    re-materialize the gathered KV view)."""
+    if mb <= 1:
+        return 1
+    cap = max(1, mb // 2)
+    ppb = select_block(mb, min(target, cap), name="pages_per_block")
+    overhead = 3 * (hq or hkv) * dh * 4  # query + f32 accumulator + exp block
+    while (
+        ppb > 1
+        and 2 * ppb * kv_page_bytes(block_size, hkv, dh, quant) + overhead
+        > vmem_budget
+    ):
+        ppb = select_block(mb, ppb // 2, name="pages_per_block")
+    return ppb

@@ -1,10 +1,11 @@
-"""Public jit'd entry points for DECA decompression ops.
+"""Public jit'd entry points for DECA decompression ops and the fused
+paged-attention decode.
 
 Dispatches between the Pallas kernels (TPU target; interpret-mode on CPU)
 and the pure-jnp reference path. The reference path is what the distributed
 model graphs use (it lowers to plain XLA HLO everywhere, including the
 512-device dry-run); the Pallas path is the TPU hot-spot implementation,
-validated bit-exactly against the reference in tests/.
+validated against the reference in tests/.
 
 Regime split (DESIGN.md §12): below `GEMV_MAX_M` rows the matmul is the
 decode GeMV regime — bandwidth-bound on the weight stream — and both impls
@@ -12,10 +13,21 @@ route to the decode-shaped variants (`ref.decompress_gemv` /
 `decompress_gemv_pallas`) that never materialize the dense (K, N) weight.
 The N-tiled GeMV is bit-identical to the full-matrix path, so routing is a
 pure performance decision and golden-battery equivalence is unaffected.
+
+`paged_attention` (DESIGN.md §13) is the same split on the decode
+*attention* path: both impls walk the quantized KV pool page by page,
+dequantize-on-read via the codec registry, and never materialize the
+gathered (B, MB*bsize, Hkv, Dh) KV view.
+
+Compile mode is one switch for all four kernel entry points (decompress,
+gemm, gemv, paged attention): `REPRO_PALLAS_INTERPRET=1` forces interpret
+mode even on TPU (debugging), `=0` forces compiled Mosaic lowering
+anywhere, unset keeps the default (interpret everywhere but real TPU).
 """
 from __future__ import annotations
 
-from typing import Optional
+import os
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,14 +36,37 @@ from repro.core.compression import CompressedTensor
 from repro.kernels import ref
 from repro.kernels.deca_decompress import decompress_pallas
 from repro.kernels.deca_gemm import decompress_gemm_pallas, decompress_gemv_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 
 # Rows at or below which the decode-shaped GeMV path is used. The decode
 # step's M is the continuous-batching slot count (<= ~32); prefill and
 # training matmuls sit far above the threshold and keep the GeMM tiling.
 GEMV_MAX_M = 32
 
+# Routing switch for the fused paged-attention decode path; False restores
+# the PR 4 gather-read hot path (the benchmark baseline and golden
+# reference — see benchmarks/bench_serving.py).
+PAGED_ATTENTION_FUSED = True
+
+_INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+
 
 def _use_interpret() -> bool:
+    """One switch for the Pallas compile mode of every kernel entry point.
+
+    `REPRO_PALLAS_INTERPRET=1` -> interpret everywhere (debug a real-TPU
+    miscompile against the interpreter); `=0` -> compiled Mosaic lowering
+    everywhere (the real-TPU `interpret=False` path, DESIGN.md §13);
+    unset -> interpret on every backend except real TPU."""
+    env = os.environ.get(_INTERPRET_ENV, "").strip().lower()
+    if env in ("1", "true", "yes", "on"):
+        return True
+    if env in ("0", "false", "no", "off"):
+        return False
+    if env:
+        raise ValueError(
+            f"{_INTERPRET_ENV}={env!r}: expected 1/true/yes/on or 0/false/no/off"
+        )
     return jax.default_backend() != "tpu"
 
 
@@ -98,3 +133,36 @@ def decompress_gemm(
     else:
         raise ValueError(impl)
     return out.reshape(*lead, out.shape[-1])
+
+
+def paged_attention(
+    q: jax.Array,                 # (B, Hq, Dh) one query token per slot
+    pools: Dict[str, jax.Array],  # kp/vp/ppos (+ks/vs for scaled codecs)
+    block_tables: jax.Array,      # (B, MB) int32 device page ids
+    kv_lens: jax.Array,           # (B,) int32 valid KV tokens per slot
+    q_pos: jax.Array,             # (B,) int32 query positions
+    *,
+    quant: str = "none",
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    impl: str = "ref",
+    pages_per_block: Optional[int] = None,
+) -> jax.Array:
+    """Fused paged-attention decode (DESIGN.md §13): dequantize-on-read
+    inside the page walk, online softmax, length-bounded by `kv_lens` —
+    the gathered dense KV view is never materialized. impl: 'ref' (the
+    length-bounded while-loop oracle the model graphs run) | 'pallas'."""
+    if impl == "ref":
+        return ref.paged_decode_attention(
+            q, pools, block_tables, kv_lens, q_pos,
+            quant=quant, causal=causal, window=window, softcap=softcap,
+            pages_per_block=pages_per_block,
+        )
+    if impl == "pallas":
+        return paged_attention_pallas(
+            q, pools, block_tables, kv_lens, q_pos,
+            quant=quant, causal=causal, window=window, softcap=softcap,
+            pages_per_block=pages_per_block, interpret=_use_interpret(),
+        )
+    raise ValueError(impl)

@@ -23,8 +23,9 @@ from repro.core.codecs import (  # noqa: F401
     get_codec,
     quantize_bf8_jnp,
 )
-from repro.core.decompress import mm
+from repro.core.decompress import current_impl, mm
 from repro.dist.sharding import constrain, constrain_qkv
+from repro.kernels import ops as kernel_ops
 
 Params = Dict[str, Any]
 
@@ -174,7 +175,13 @@ def attention_core(
     q_chunk: int = 1024,
 ) -> jax.Array:
     """Grouped-query attention, chunked over queries so peak memory is
-    O(q_chunk * Sk) rather than O(Sq * Sk). Mixed-precision: scores in f32.
+    O(q_chunk * Sk) rather than O(Sq * Sk). Mixed-precision: scores in f32,
+    and the PV contraction f32-accumulates *f32 probabilities* — the same
+    discipline as the fused paged-attention accumulator (kernels/ref.py),
+    which keeps the gather-read and fused decode paths within
+    fp32-accumulator tolerance of each other (greedy decode is
+    path-independent in practice; a bf16 probs cast here put ~1e-2 noise
+    between the paths, enough to flip near-tie argmaxes).
 
     `q_pos`/`k_pos` may be shared `(Sq,)`/`(Sk,)` or per-request
     `(B, Sq)`/`(B, Sk)` (paged KV: each request gathers its own blocks)."""
@@ -194,7 +201,7 @@ def attention_core(
         if mask.ndim == 3:  # (B, Cq, Sk) -> broadcast over (Hkv, G)
             mask = mask[:, None, None]
         scores = scores + mask
-        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        probs = jax.nn.softmax(scores, axis=-1)
         return jnp.einsum(
             "bhgqk,bkhd->bqhgd", probs, v, preferred_element_type=jnp.float32
         )
@@ -222,7 +229,9 @@ def attention_core(
     return out.reshape(b, sq, hq, dh).astype(q.dtype)
 
 
-CACHE_EMPTY_POS = 1 << 30  # sentinel: empty cache slots masked via huge position
+# sentinel: empty cache slots masked via huge position (canonical home is
+# kernels/ref.py, where the fused paged-attention page walk also needs it)
+from repro.kernels.ref import CACHE_EMPTY_POS  # noqa: F401, E402
 
 
 def _kv_codec(quant: str):
@@ -442,11 +451,20 @@ def paged_attention_block(
     write_slots: jax.Array,    # (B, S)
     write_pos: jax.Array,      # (B, S)
     fresh_pages: Optional[jax.Array] = None,  # (F,)
+    kv_lens: Optional[jax.Array] = None,      # (B,) valid KV tokens per slot
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Attention layer against the paged pool: proj -> per-request rope ->
-    scatter into pool -> gather-read -> attn -> out. The gathered key order
-    is position order (table slot p//bsize, offset p%bsize), so real-token
-    accumulation matches the dense ring cache."""
+    scatter into pool -> read -> attn -> out.
+
+    Decode shapes (S == 1 with a `kv_lens` length vector threaded from the
+    scheduler) route through the fused paged-attention path (DESIGN.md
+    §13): quantized pages are dequantized-on-read inside a length-bounded
+    page walk with an online-softmax accumulator, so the dense gathered KV
+    view never exists. Prefill — and `kernel_ops.PAGED_ATTENTION_FUSED =
+    False` — keep the gather-read path, which doubles as the golden
+    reference: the gathered key order is position order (table slot
+    p//bsize, offset p%bsize), so real-token accumulation matches the
+    dense ring cache."""
     b, s, _ = x.shape
     hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     q = mm(x, params["wq"]).reshape(b, s, hq, dh)
@@ -471,16 +489,25 @@ def paged_attention_block(
     new_cache = paged_update_cache(
         cache, k, v, write_pos, write_slots, fresh_pages, quant=cfg.kv_quant
     )
-    k_all, v_all, k_pos = paged_gather_kv(
-        new_cache, block_tables, quant=cfg.kv_quant
-    )
-    k_all, v_all = constrain(k_all, "bshd"), constrain(v_all, "bshd")
-    out = attention_core(
-        q, k_all, v_all,
-        q_pos=tok_pos, k_pos=k_pos,
-        causal=cfg.causal, window=cfg.window if local else 0,
-        softcap=cfg.attn_softcap,
-    )
+    window = cfg.window if local else 0
+    if kv_lens is not None and s == 1 and kernel_ops.PAGED_ATTENTION_FUSED:
+        att = kernel_ops.paged_attention(
+            q[:, 0], new_cache, block_tables, kv_lens, tok_pos[:, 0],
+            quant=cfg.kv_quant, causal=cfg.causal, window=window,
+            softcap=cfg.attn_softcap, impl=current_impl(),
+        )
+        out = att[:, None]  # (B, 1, Hq, Dh)
+    else:
+        k_all, v_all, k_pos = paged_gather_kv(
+            new_cache, block_tables, quant=cfg.kv_quant
+        )
+        k_all, v_all = constrain(k_all, "bshd"), constrain(v_all, "bshd")
+        out = attention_core(
+            q, k_all, v_all,
+            q_pos=tok_pos, k_pos=k_pos,
+            causal=cfg.causal, window=window,
+            softcap=cfg.attn_softcap,
+        )
     out = constrain(out, "bshd")
     return mm(out.reshape(b, s, hq * dh), params["wo"]), new_cache
 

@@ -196,6 +196,7 @@ class Model:
                     write_slots=paged["write_slots"],
                     write_pos=paged["write_pos"],
                     fresh_pages=paged.get("fresh_pages"),
+                    kv_lens=paged.get("kv_lens"),
                 )
             else:
                 out, new_cache = L.attention_block(
@@ -240,7 +241,10 @@ class Model:
         the dense ring cache: {block_tables (B, MB), write_slots (B, S),
         write_pos (B, S)} — host-computed by serve/paged_cache.py. With
         paged, `cache` must be an `init_paged_cache` pool tree and
-        `positions` carries true per-request positions."""
+        `positions` carries true per-request positions. An optional
+        `kv_lens` (B,) length vector (threaded from the scheduler's block
+        allocator) routes decode shapes through the fused paged-attention
+        page walk (DESIGN.md §13)."""
         cfg = self.cfg
         if embeds is None:
             x = jnp.take(params["embed"], tokens, axis=0)
@@ -363,10 +367,13 @@ class Model:
         write_slots: jax.Array,   # (B, 1)
         write_pos: jax.Array,     # (B, 1)
         fresh_pages: jax.Array,   # (B,) pages newly allocated this step
+        kv_lens: Optional[jax.Array] = None,  # (B,) valid KV tokens per slot
     ) -> Tuple[jax.Array, Any]:
         """One next-token step over the active continuous-batching slots,
         reading/writing the block-paged pool. Fixed-shape: B is the slot
-        count and MB the max pages per request, so it jits once."""
+        count and MB the max pages per request, so it jits once. `kv_lens`
+        (threaded from the scheduler) bounds the fused attention page walk;
+        without it the step falls back to the gather-read reference."""
         logits, new_cache, _ = self.forward(
             params, tokens=tokens, positions=positions, cache=cache,
             paged={
@@ -374,6 +381,7 @@ class Model:
                 "write_slots": write_slots,
                 "write_pos": write_pos,
                 "fresh_pages": fresh_pages,
+                "kv_lens": kv_lens,
             },
         )
         return logits[:, -1, :], new_cache
@@ -388,6 +396,7 @@ class Model:
         write_slots: jax.Array,   # (C, B, 1) precomputed flat slot ids
         write_pos: jax.Array,     # (C, B, 1) write positions
         fresh_pages: jax.Array,   # (C, F) pages to scrub (row 0 real)
+        kv_lens: jax.Array,       # (C, B) valid KV tokens per step per slot
         *,
         sample_fn: Callable[[jax.Array, jax.Array], jax.Array],
         max_steps: jax.Array,     # (B,) steps this slot may still take
@@ -411,7 +420,7 @@ class Model:
         """
         def body(carry, xs):
             pools, tok, done, j = carry
-            pos, wslot, wpos, fresh = xs
+            pos, wslot, wpos, fresh, klen = xs
             # finished (or inactive) slots write to the null page with the
             # empty sentinel — identical to the single-step inactive path
             wslot = jnp.where(done[:, None], 0, wslot)
@@ -419,7 +428,8 @@ class Model:
             if self.cfg.mrope_sections:
                 pos = jnp.broadcast_to(pos, (3,) + pos.shape)
             logits, pools = self.decode_step_paged(
-                params, tok, pos, pools, block_tables, wslot, wpos, fresh
+                params, tok, pos, pools, block_tables, wslot, wpos, fresh,
+                klen,
             )
             t = sample_fn(logits, j).astype(jnp.int32)
             done = done | (j + 1 >= max_steps) | (t == eos_ids)
@@ -428,6 +438,7 @@ class Model:
         done0 = ~active
         carry0 = (cache, tokens0, done0, jnp.zeros((), jnp.int32))
         (new_cache, _, _, _), toks = jax.lax.scan(
-            body, carry0, (positions, write_slots, write_pos, fresh_pages)
+            body, carry0,
+            (positions, write_slots, write_pos, fresh_pages, kv_lens),
         )
         return toks, new_cache

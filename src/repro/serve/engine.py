@@ -96,13 +96,15 @@ def make_paged_prefill_step(model: Model) -> Callable:
 
 def make_paged_decode_step(model: Model) -> Callable:
     """paged_step(params, tokens (M,1), positions, cache, block_tables,
-    write_slots, write_pos, fresh_pages) -> (logits (M,V), cache). Fixed
-    shape over the M continuous-batching slots — jits exactly once."""
+    write_slots, write_pos, fresh_pages, kv_lens (M,)) -> (logits (M,V),
+    cache). Fixed shape over the M continuous-batching slots — jits exactly
+    once. `kv_lens` bounds the fused attention page walk (DESIGN.md §13)."""
 
     def paged_step(params, tokens, positions, cache, tables, slots, wpos,
-                   fresh):
+                   fresh, kv_lens):
         return model.decode_step_paged(
-            params, tokens, positions, cache, tables, slots, wpos, fresh
+            params, tokens, positions, cache, tables, slots, wpos, fresh,
+            kv_lens,
         )
 
     return paged_step
@@ -129,8 +131,8 @@ def make_paged_decode_chunk_step(model: Model) -> Callable:
 
     @functools.partial(jax.jit, static_argnames=("greedy",))
     def chunk_step(params, cache, tokens0, tables, positions, wslots, wpos,
-                   fresh, rids, start_steps, max_steps, eos, active, temp,
-                   key, *, greedy):
+                   fresh, kv_lens, rids, start_steps, max_steps, eos, active,
+                   temp, key, *, greedy):
         def sample(logits, j):
             logits = logits.astype(jnp.float32)
             if greedy:
@@ -141,6 +143,7 @@ def make_paged_decode_chunk_step(model: Model) -> Callable:
 
         return model.decode_chunk_paged(
             params, tokens0, cache, tables, positions, wslots, wpos, fresh,
+            kv_lens,
             sample_fn=sample, max_steps=max_steps, eos_ids=eos, active=active,
         )
 
@@ -253,6 +256,10 @@ class GenerationEngine:
             self._paged_prefill = jax.jit(make_paged_prefill_step(model))
             self._paged_decode = jax.jit(make_paged_decode_step(model))
             self._paged_decode_chunk = make_paged_decode_chunk_step(model)
+            # window-aware page freeing is sound only when *every* layer's
+            # attention is local: one global layer keeps the full history
+            # live (the pool is shared across layers)
+            all_local = all(k == "attn_local" for k in model.kinds)
             self.scheduler = Scheduler(
                 self.kv,
                 max_slots=max_slots,
@@ -263,6 +270,9 @@ class GenerationEngine:
                 decode_chunk_fn=self._run_paged_decode_chunk,
                 chunk=max(1, decode_chunk),
                 prefill_batch=prefill_batch,
+                local_window=(
+                    self.cfg.window if all_local and self.cfg.window > 0 else None
+                ),
             )
 
     def _mesh_scope(self):
@@ -319,7 +329,9 @@ class GenerationEngine:
             )
         return logits
 
-    def _run_paged_decode(self, tokens, positions, tables, slots, wpos, fresh):
+    def _run_paged_decode(
+        self, tokens, positions, tables, slots, wpos, fresh, kv_lens
+    ):
         with self._mesh_scope():
             logits, self.kv.pools = self._paged_decode(
                 self.params,
@@ -330,11 +342,12 @@ class GenerationEngine:
                 jnp.asarray(slots),
                 jnp.asarray(wpos),
                 jnp.asarray(fresh),
+                jnp.asarray(kv_lens, jnp.int32),
             )
         return logits
 
     def _run_paged_decode_chunk(
-        self, tokens0, tables, positions, wslots, wpos, fresh,
+        self, tokens0, tables, positions, wslots, wpos, fresh, kv_lens,
         rids, start_steps, max_steps, eos, active,
     ):
         """One device-resident chunk: only the sampled (C, M) token ids
@@ -349,6 +362,7 @@ class GenerationEngine:
                 jnp.asarray(wslots),
                 jnp.asarray(wpos),
                 jnp.asarray(fresh),
+                jnp.asarray(kv_lens, jnp.int32),
                 jnp.asarray(rids, jnp.uint32),
                 jnp.asarray(start_steps, jnp.uint32),
                 jnp.asarray(max_steps, jnp.int32),

@@ -122,11 +122,32 @@ class PagedKVCache:
         self._reserved[rid] = self.blocks_for(kv_len)
 
     def release(self, rid: int) -> None:
-        self.allocator.free(self._tables.pop(rid))
+        table = self._tables.pop(rid)
+        self.allocator.free([p for p in table if p is not None])
         self._reserved.pop(rid, None)
 
     def blocks_held(self, rid: int) -> int:
-        return len(self._tables[rid])
+        return sum(1 for p in self._tables[rid] if p is not None)
+
+    def free_behind(self, rid: int, min_live_pos: int) -> int:
+        """Window-aware freeing (DESIGN.md §13): release every page whose
+        token range lies wholly below `min_live_pos` — positions no live or
+        future query can attend to once an all-local stack's window has
+        slid past them. The table keeps a `None` placeholder so later
+        block indices stay position-addressed; `block_table_row` turns the
+        placeholder into a null-page read, which the scrubbed sentinel
+        masks (reads must *not* target the stale physical page — it may
+        already belong to another tenant). Returns the pages freed."""
+        table = self._tables[rid]
+        bs = self.block_size
+        dead = []
+        for bi in range(min(len(table), max(0, min_live_pos) // bs)):
+            if table[bi] is not None and (bi + 1) * bs <= min_live_pos:
+                dead.append(table[bi])
+                table[bi] = None
+        if dead:
+            self.allocator.free(dead)
+        return len(dead)
 
     # -- slot / table arrays for the jitted steps ----------------------------
 
@@ -142,6 +163,13 @@ class PagedKVCache:
                 table.append(self.allocator.alloc())
                 self._fresh.append(table[-1] + 1)
                 self._reserved[rid] = max(0, self._reserved[rid] - 1)
+            if table[bi] is None:
+                # positions only grow and free_behind only releases pages
+                # behind the window — a write can never land on one
+                raise ValueError(
+                    f"request {rid}: write at position {p} targets a "
+                    "window-freed page"
+                )
             out[i] = (table[bi] + 1) * bs + p % bs
         return out
 
@@ -163,7 +191,8 @@ class PagedKVCache:
 
     def block_table_row(self, rid: Optional[int], max_blocks: int) -> np.ndarray:
         """(max_blocks,) device page ids, null-page-padded; all-null when the
-        slot is inactive (rid None)."""
+        slot is inactive (rid None). Window-freed entries read the null
+        page too — the physical page may already serve another tenant."""
         row = np.zeros(max_blocks, np.int32)
         if rid is not None:
             table = self._tables[rid]
@@ -171,5 +200,7 @@ class PagedKVCache:
                 raise ValueError(
                     f"request {rid} holds {len(table)} pages > max_blocks={max_blocks}"
                 )
-            row[: len(table)] = np.asarray(table, np.int32) + 1
+            row[: len(table)] = np.asarray(
+                [0 if p is None else p + 1 for p in table], np.int32
+            )
         return row

@@ -33,6 +33,7 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.kernels import ops as kernel_ops
 from repro.models.layers import CACHE_EMPTY_POS
 from repro.serve.paged_cache import PagedKVCache
 
@@ -62,17 +63,29 @@ class Scheduler:
                write_slots (B,Sp), write_pos (B,Sp), fresh (F,),
                last_idx (B,)) -> last-token logits (B, V) on device
     decode_fn(tokens (M,1), positions (M,1), block_tables (M,MB),
-              write_slots (M,1), write_pos (M,1), fresh (M,)) -> logits (M, V)
+              write_slots (M,1), write_pos (M,1), fresh (M,),
+              kv_lens (M,)) -> logits (M, V)
     decode_chunk_fn(tokens0 (M,1), tables (M,MB), positions (C,M,1),
                     write_slots (C,M,1), write_pos (C,M,1), fresh (C,F),
-                    rids (M,), start_steps (M,), max_steps (M,), eos (M,),
-                    active (M,)) -> np tokens (C, M)
+                    kv_lens (C,M), rids (M,), start_steps (M,),
+                    max_steps (M,), eos (M,), active (M,)) -> np tokens (C, M)
     sample_fn(logits (N,V) on device, rids (N,), steps (N,)) -> np tokens (N,)
+
+    `kv_lens` is the per-slot length vector of DESIGN.md §13 — the block
+    allocator's view of how many KV tokens each slot actually holds — and
+    bounds the fused paged-attention page walk to each slot's used pages
+    instead of max_blocks.
 
     With `chunk` > 1 and a `decode_chunk_fn`, decode runs device-resident:
     logits, sampling, and EOS/length-cap checks never leave the device
     inside a chunk — only the (C, M) sampled token ids cross to host, once
     per chunk.
+
+    `local_window` (set by the engine when *every* attention layer is
+    local) enables window-aware page freeing: after each scheduling round,
+    pages that have slid entirely behind every live and future query's
+    attention window go back to the free list; their table entries become
+    null-page reads, which the position sentinel masks to zero weight.
     """
 
     def __init__(
@@ -87,11 +100,14 @@ class Scheduler:
         decode_chunk_fn: Optional[Callable] = None,
         chunk: int = 1,
         prefill_batch: bool = True,
+        local_window: Optional[int] = None,
     ):
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
         if chunk > 1 and decode_chunk_fn is None:
             raise ValueError("chunk > 1 requires a decode_chunk_fn")
+        if local_window is not None and local_window < 1:
+            raise ValueError(f"local_window must be >= 1, got {local_window}")
         self.cache = cache
         self.max_slots = max_slots
         self.max_len = max_len
@@ -102,6 +118,7 @@ class Scheduler:
         self._sample = sample_fn
         self.chunk = chunk
         self.prefill_batch = prefill_batch
+        self.local_window = local_window
         self.queue: collections.deque = collections.deque()
         self.slots: List[Optional[Request]] = [None] * max_slots
         self.results: Dict[int, np.ndarray] = {}
@@ -113,6 +130,7 @@ class Scheduler:
             "paged_block_steps": 0, "dense_block_steps": 0, "peak_blocks": 0,
             "prefill_calls": 0, "prefill_token_steps": 0,
             "prefill_real_tokens": 0,
+            "kv_pages_read": 0, "kv_pages_read_worst": 0, "window_freed_pages": 0,
         }
 
     # ------------------------------------------------------------------
@@ -188,6 +206,7 @@ class Scheduler:
             for slot, r in admitted:
                 if self._finished(r):
                     self._evict(slot)
+            self._free_window_pages()  # long prompts may already out-span it
 
     def _prefill_batch(self, admitted: List[tuple], bucketed: bool = True) -> None:
         """One bucketed-shape prefill for every request admitted this round.
@@ -265,6 +284,7 @@ class Scheduler:
         write_pos = np.full((m, 1), CACHE_EMPTY_POS, np.int32)
         write_slots = np.zeros((m, 1), np.int32)  # null page, offset 0
         tables = np.zeros((m, mb), np.int32)
+        kv_lens = np.zeros(m, np.int32)
         rids = np.full(m, -1, np.int64)  # -1: unreachable uint32 sentinel
         steps = np.zeros(m, np.int64)
         for i, r in active:
@@ -274,11 +294,12 @@ class Scheduler:
             write_pos[i, 0] = pos
             write_slots[i, 0] = self.cache.write_slots(r.rid, pos, 1)[0]
             tables[i] = self.cache.block_table_row(r.rid, mb)
+            kv_lens[i] = r.next_pos  # incl. the token this step writes
             rids[i] = r.rid
             steps[i] = len(r.out)
         fresh = self.cache.drain_fresh(m)
         logits = self._decode(
-            tokens, positions, tables, write_slots, write_pos, fresh
+            tokens, positions, tables, write_slots, write_pos, fresh, kv_lens
         )
         toks = self._sample(logits, rids, steps)
         for i, r in active:
@@ -286,10 +307,12 @@ class Scheduler:
             r.peak_blocks = max(r.peak_blocks, self.cache.blocks_held(r.rid))
 
         self._account_decode(1, len(active))
+        self._account_kv_read(int(kv_lens[i]) for i, _ in active)
 
         for i, r in active:
             if self._finished(r):
                 self._evict(i)
+        self._free_window_pages()
 
     def _decode_active_chunked(self, active) -> None:
         """Precompute a whole chunk's slot/position advancement, run it as
@@ -312,6 +335,7 @@ class Scheduler:
         write_slots = np.zeros((c, m, 1), np.int32)
         write_pos = np.full((c, m, 1), CACHE_EMPTY_POS, np.int32)
         tables = np.zeros((m, mb), np.int32)
+        kv_lens = np.zeros((c, m), np.int32)
         rids = np.full(m, -1, np.int64)
         start_steps = np.zeros(m, np.int64)
         max_steps = np.zeros(m, np.int32)
@@ -334,6 +358,10 @@ class Scheduler:
             positions[:, i, 0] = p0 + np.arange(c)
             write_slots[:si, i, 0] = slots_i
             write_pos[:si, i, 0] = p0 + np.arange(si)
+            # the §13 length vector: the fused page walk at step j covers
+            # the tokens written through position p0 + j (the chunk's
+            # pre-allocated future pages sit scrubbed-empty past it)
+            kv_lens[:, i] = p0 + 1 + np.arange(c)
         for i, r in active:
             tables[i] = self.cache.block_table_row(r.rid, mb)
         fresh = np.zeros((c, f), np.int32)
@@ -341,7 +369,7 @@ class Scheduler:
 
         toks = self._decode_chunk(
             tokens0, tables, positions, write_slots, write_pos, fresh,
-            rids, start_steps, max_steps, eos, act,
+            kv_lens, rids, start_steps, max_steps, eos, act,
         )  # (c, m) np.int32
 
         steps_taken: Dict[int, int] = {}
@@ -358,6 +386,7 @@ class Scheduler:
         for i, r in active:
             if self._finished(r):
                 self._evict(i)
+        self._free_window_pages()
 
     def _account_decode_chunk(
         self,
@@ -397,6 +426,7 @@ class Scheduler:
             st["paged_block_steps"] += used
             st["dense_block_steps"] += len(live) * self.max_blocks
             st["peak_blocks"] = max(st["peak_blocks"], used)
+            self._account_kv_read(p0s[i] + j + 1 for i in live)
             for i, r in active:
                 if steps_taken[i] == j + 1 and self._finished(r):
                     used -= held0[i] + grown[i]
@@ -412,6 +442,46 @@ class Scheduler:
         # max_blocks pages per active slot-step
         st["dense_block_steps"] += slot_steps * self.max_blocks
         st["peak_blocks"] = max(st["peak_blocks"], used)
+
+    def _account_kv_read(self, kv_lens) -> None:
+        """Charge one decode token's KV read traffic per live slot. With
+        the fused path on, the walk covers [first window-visible page,
+        ceil(kv_len / bsize)) — the §13 bounds; with it routed off
+        (`ops.PAGED_ATTENTION_FUSED = False`, the benchmark baseline),
+        decode really does gather all max_blocks pages and the stat must
+        say so. The worst-case column is always the max_blocks gather."""
+        st = self._stats
+        bs = self.cache.block_size
+        fused = kernel_ops.PAGED_ATTENTION_FUSED
+        for kv_len in kv_lens:
+            if fused:
+                first = (
+                    max(0, kv_len - self.local_window) // bs
+                    if self.local_window
+                    else 0
+                )
+                pages = min(self.max_blocks, -(-kv_len // bs)) - first
+            else:
+                pages = self.max_blocks
+            st["kv_pages_read"] += pages
+            st["kv_pages_read_worst"] += self.max_blocks
+
+    def _free_window_pages(self) -> None:
+        """Window-aware page freeing (all-local-attention stacks only):
+        a key at position p is visible to query q iff p > q - window, and
+        live queries only advance, so every page wholly below
+        `next_pos - window` is dead for good. Its table entry becomes a
+        null-page read (masked by the scrubbed sentinel — never the stale
+        physical page, which may be reallocated to another tenant)."""
+        if self.local_window is None:
+            return
+        freed = 0
+        for r in self.slots:
+            if r is not None:
+                freed += self.cache.free_behind(
+                    r.rid, r.next_pos - self.local_window
+                )
+        self._stats["window_freed_pages"] += freed
 
     def _finished(self, r: Request) -> bool:
         return len(r.out) >= r.max_new_tokens or (
@@ -446,4 +516,14 @@ class Scheduler:
         # so a quantized kv_quant shows its byte saving next to the paging
         # stats
         st["kv_bytes_per_token"] = self.cache.bytes_per_token()
+        # decode-attention read traffic (DESIGN.md §13): bytes the fused
+        # length-bounded page walk actually streamed per decoded token vs
+        # the max_blocks worst case the gather-read always paid — the
+        # observable for the paged-attention win (benchmarks serving_decode)
+        page_bytes = self.cache.bytes_per_token() * self.cache.block_size
+        toks = max(1, st["active_slot_steps"])
+        st["kv_read_bytes_per_token"] = st["kv_pages_read"] * page_bytes / toks
+        st["kv_read_bytes_per_token_worst"] = (
+            st["kv_pages_read_worst"] * page_bytes / toks
+        )
         return st

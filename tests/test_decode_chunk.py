@@ -248,6 +248,7 @@ def test_decode_step_never_materializes_dense_weight():
         np.zeros((M, 1), i32), np.zeros((M, MB), i32),
         np.zeros((C, M, 1), i32), np.zeros((C, M, 1), i32),
         np.zeros((C, M, 1), i32), np.zeros((C, F), i32),
+        np.ones((C, M), i32),
         np.zeros(M, np.uint32), np.zeros(M, np.uint32),
         np.full(M, C, i32), np.full(M, -1, i32), np.ones(M, bool),
         np.float32(1.0), jax.random.PRNGKey(0),

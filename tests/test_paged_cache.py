@@ -92,6 +92,96 @@ def test_random_admit_evict_append_never_leaks_blocks(
     assert cache.reserved_blocks == 0
 
 
+# op stream for the window-freeing battery: admit / append / free_behind /
+# evict — free_behind models the scheduler's window-aware freeing for
+# all-local attention stacks (DESIGN.md §13)
+_WOPS = st.lists(
+    st.tuples(st.sampled_from(["admit", "append", "window", "evict"]),
+              st.integers(0, 7), st.integers(1, 9)),
+    min_size=1, max_size=60,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=_WOPS, num_blocks=st.integers(4, 24), block_size=st.integers(1, 8),
+       window=st.integers(1, 20))
+def test_window_freeing_never_leaks_blocks(ops, num_blocks, block_size, window):
+    """The leak invariant survives window-aware freeing: free + allocated
+    always sums to the pool size, a live request holds exactly the pages
+    of its *live* span (written length minus wholly-dead leading pages),
+    and freed front pages read as the null page — never a stale id."""
+    cache = PagedKVCache(
+        _PoolStub(), num_blocks=num_blocks, block_size=block_size
+    )
+    live = {}  # rid -> (kv_len budget, tokens written)
+    next_rid = 0
+    for kind, pick, n in ops:
+        if kind == "admit":
+            kv_len = min(n * block_size, num_blocks * block_size)
+            if cache.can_admit(kv_len):
+                cache.admit(next_rid, kv_len)
+                live[next_rid] = [kv_len, 0]
+                next_rid += 1
+        elif kind == "append" and live:
+            rid = sorted(live)[pick % len(live)]
+            budget, written = live[rid]
+            take = min(n, budget - written)
+            if take > 0:
+                slots = cache.write_slots(rid, written, take)
+                assert (slots >= block_size).all()  # never the null page
+                live[rid][1] += take
+        elif kind == "window" and live:
+            rid = sorted(live)[pick % len(live)]
+            written = live[rid][1]
+            cache.free_behind(rid, max(0, written - window))
+        elif kind == "evict" and live:
+            rid = sorted(live)[pick % len(live)]
+            cache.release(rid)
+            del live[rid]
+
+        alloc = cache.allocator
+        assert alloc.free_count + alloc.used_count == num_blocks
+        held = sum(cache.blocks_held(rid) for rid in live)
+        assert held == alloc.used_count
+        for rid, (_, written) in live.items():
+            total = math.ceil(written / block_size)
+            # pages wholly behind `written - window` may have been freed;
+            # pages intersecting the live span never are
+            dead_max = max(0, written - window) // block_size
+            assert total - dead_max <= cache.blocks_held(rid) <= total
+            row = cache.block_table_row(rid, math.ceil(num_blocks))
+            assert (row >= 0).all()  # freed entries are the null page (0)
+        assert cache.reserved_blocks <= alloc.free_count
+
+    for rid in list(live):
+        cache.release(rid)
+    assert cache.allocator.free_count == num_blocks
+    assert cache.reserved_blocks == 0
+
+
+def test_free_behind_is_idempotent_and_appends_still_work():
+    """Freeing is page-granular and idempotent; appends past the freed
+    prefix land on fresh pages, and writes can never target a freed page."""
+    cache = PagedKVCache(_PoolStub(), num_blocks=6, block_size=2)
+    cache.admit(0, 12)
+    cache.write_slots(0, 0, 8)  # pages 0..3 of the request
+    assert cache.blocks_held(0) == 4
+    assert cache.free_behind(0, 5) == 2  # pages [0,2) and [2,4) are dead
+    assert cache.free_behind(0, 5) == 0  # idempotent
+    assert cache.blocks_held(0) == 2
+    # table row: freed entries read the null page, live ones keep their ids
+    row = cache.block_table_row(0, 6)
+    assert (row[:2] == 0).all() and (row[2:4] > 0).all()
+    # appending continues on fresh pages
+    cache.write_slots(0, 8, 2)
+    assert cache.blocks_held(0) == 3
+    # a (buggy) write into the freed span fails loudly
+    with pytest.raises(ValueError, match="window-freed"):
+        cache.write_slots(0, 1, 1)
+    cache.release(0)
+    assert cache.allocator.free_count == 6
+
+
 def test_allocator_rejects_double_free_and_exhaustion():
     a = BlockAllocator(2)
     b0, b1 = a.alloc(), a.alloc()
