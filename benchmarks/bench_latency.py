@@ -1,0 +1,294 @@
+"""Open-loop serving latency harness (DESIGN.md §14, the PR 6 deliverable).
+
+Closed-loop throughput numbers (BENCH_PR4/PR5) hide latency structure: a
+scheduler that batches aggressively can win tok/s while every request's
+TTFT balloons. This harness drives the paged engine with an *open-loop*
+arrival process — requests arrive by a Poisson clock at `--rate` req/s
+with mixed prompt lengths, whether or not the server is keeping up — and
+reports what a client would see:
+
+  * per-request TTFT and inter-token latency percentiles (p50/p90/p99,
+    from the request-lifecycle Tracer's token-visibility timestamps), and
+  * the RoofLens predicted-vs-measured roofline error per regime — the
+    calibration table the planned SLA admission controller consumes.
+
+The flow is warmup-then-measure: one closed-loop drain of the same traffic
+compiles every jit bucket and calibrates the RoofLens scale, then the
+collectors reset and the timed open-loop run starts clean.
+
+    PYTHONPATH=src:. python benchmarks/bench_latency.py --rate 4 --requests 32
+    PYTHONPATH=src:. python benchmarks/bench_latency.py --smoke \
+        --trace latency_trace.json --json BENCH_PR6.json
+
+`--smoke` is the CI preset (low rate, tiny model, seconds not minutes).
+Committed numbers live in BENCH_PR6.json; `benchmarks/check_regression.py
+serving_latency` guards the machine-portable p99-ITL tail ratio.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax
+
+from benchmarks.common import row
+from repro.configs.base import get_smoke_config
+from repro.core.decompress import compress_tree
+from repro.core.formats import get_spec
+from repro.models.model import Model
+from repro.obs import Observability
+from repro.serve.engine import GenerationEngine
+
+
+def _build_engine(*, fmt: str, kv_quant: Optional[str], chunk: int,
+                  max_slots: int, block_size: int, max_len: int,
+                  obs: Observability) -> GenerationEngine:
+    cfg = get_smoke_config("llama3-8b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    weights = compress_tree(params, get_spec(fmt)) if fmt != "dense" else params
+    return GenerationEngine(
+        model, weights, max_len=max_len, block_size=block_size,
+        max_slots=max_slots, decode_chunk=chunk, kv_quant=kv_quant, obs=obs,
+    )
+
+
+def _make_prompts(rng, n: int, lo: int, hi: int, vocab: int) -> List[np.ndarray]:
+    return [
+        rng.integers(0, vocab, int(x)).astype(np.int32)
+        for x in rng.integers(lo, hi + 1, n)
+    ]
+
+
+def _warmup(engine, rng, *, prompt_lo: int, prompt_hi: int, max_new: int,
+            chunk: int, max_slots: int) -> None:
+    """Compile every jit bucket the open-loop run can hit, so no compile
+    lands inside a measured TTFT/ITL: prefill buckets are (pow2 batch,
+    page-rounded span) pairs, decode chunks specialize on the pow2 chunk
+    length. Closed-loop drains over that grid also hand RoofLens its
+    calibration samples across batch compositions."""
+    bs = engine.block_size
+    vocab = engine.cfg.vocab_size
+    pages_lo = max(1, -(-prompt_lo // bs))
+    pages_hi = max(pages_lo, -(-prompt_hi // bs))
+    b = 1
+    while b <= max_slots:
+        for pages in range(pages_lo, pages_hi + 1):
+            plen = max((pages - 1) * bs + 1, min(prompt_hi, pages * bs))
+            for _ in range(b):
+                engine.submit(
+                    rng.integers(0, vocab, plen).astype(np.int32),
+                    max_new_tokens=max_new,
+                )
+            engine.run_until_drained()
+        b *= 2
+    # chunk-length tails: the scan specializes per pow2 chunk c < chunk
+    # (a request whose remaining budget underruns the chunk gets a
+    # smaller scan) — touch each once
+    c = 1
+    while c < chunk:
+        engine.submit(
+            rng.integers(0, vocab, prompt_lo).astype(np.int32),
+            max_new_tokens=c + 1,
+        )
+        engine.run_until_drained()
+        c *= 2
+
+
+def run_open_loop(
+    *,
+    rate: float,
+    n_requests: int,
+    prompt_lo: int = 8,
+    prompt_hi: int = 48,
+    max_new: int = 24,
+    fmt: str = "mxfp4_100",
+    kv_quant: Optional[str] = None,
+    chunk: int = 8,
+    max_slots: int = 8,
+    block_size: int = 16,
+    max_len: int = 128,
+    seed: int = 0,
+    trace_path: Optional[str] = None,
+) -> Dict:
+    """Drive one open-loop run; returns the BENCH_PR6-shaped result dict."""
+    obs = Observability.default()
+    engine = _build_engine(
+        fmt=fmt, kv_quant=kv_quant, chunk=chunk, max_slots=max_slots,
+        block_size=block_size, max_len=max_len, obs=obs,
+    )
+    rng = np.random.default_rng(seed)
+    vocab = engine.cfg.vocab_size
+
+    # two-pass warmup: the first sweep compiles every prefill/decode bucket
+    # this traffic can hit (each prefill sample there IS a compile, so its
+    # timings are discarded); the second sweep re-runs the grid compiled
+    # and those clean samples fit the RoofLens calibration
+    wkw = dict(prompt_lo=prompt_lo, prompt_hi=prompt_hi, max_new=max_new,
+               chunk=chunk, max_slots=max_slots)
+    _warmup(engine, rng, **wkw)
+    obs.rooflens.reset_samples()
+    _warmup(engine, rng, **wkw)
+    obs.rooflens.calibrate()
+    obs.rooflens.reset_samples()
+    obs.tracer.reset()
+
+    # the measured open-loop run: Poisson arrivals, mixed prompt lengths
+    prompts = _make_prompts(rng, n_requests, prompt_lo, prompt_hi, vocab)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    sch = engine.scheduler
+    t_start = time.perf_counter()
+    nxt = 0
+    while nxt < n_requests or sch.queue or any(
+        r is not None for r in sch.slots
+    ):
+        now = time.perf_counter() - t_start
+        while nxt < n_requests and arrivals[nxt] <= now:
+            engine.submit(prompts[nxt], max_new_tokens=max_new)
+            nxt += 1
+        if sch.queue or any(r is not None for r in sch.slots):
+            sch.step()
+        elif nxt < n_requests:
+            time.sleep(max(0.0, arrivals[nxt] - (time.perf_counter() - t_start)))
+    wall = time.perf_counter() - t_start
+    engine.run_until_drained()  # collect results dict (already drained)
+
+    if trace_path:
+        obs.tracer.export_chrome_trace(trace_path)
+
+    summary = obs.tracer.summary()
+    errors = obs.rooflens.error_report()
+    ttft, itl = summary["ttft_s"], summary["itl_s"]
+    itl_tail = (
+        itl["p99"] / itl["mean"]
+        if itl.get("mean") and not math.isnan(itl["mean"]) and itl["mean"] > 0
+        else math.nan
+    )
+    res = {
+        "rate_req_s": rate,
+        "n_requests": n_requests,
+        "n_tokens": summary["n_tokens"],
+        "tok_s": round(summary["n_tokens"] / wall, 2),
+        "chunk": chunk,
+        "max_slots": max_slots,
+        "fmt": fmt,
+        "kv_quant": kv_quant or "none",
+        "ttft_ms": {k: round(v * 1e3, 3) for k, v in ttft.items()},
+        "itl_ms": {k: round(v * 1e3, 3) for k, v in itl.items()},
+        # p99 ITL over mean ITL: the machine-portable tail shape the
+        # regression guard holds (absolute ms are machine-bound). With
+        # chunked decode this sits near the chunk size by construction —
+        # tokens burst once per chunk (DESIGN.md §12/§14).
+        "itl_tail_ratio": round(itl_tail, 3),
+        "roofline_error": {
+            k: {kk: round(vv, 4) for kk, vv in v.items()}
+            for k, v in errors.items()
+        },
+        "rooflens_scale": {
+            k: round(v, 6) for k, v in obs.rooflens.scale.items()
+        },
+    }
+    return res
+
+
+SMOKE = dict(rate=6.0, n_requests=10, prompt_lo=8, prompt_hi=32, max_new=12,
+             chunk=4, max_slots=4)
+
+
+def serving_latency_results(**overrides) -> Dict:
+    """The check_regression entry point (smoke-scale, deterministic seed)."""
+    kw = dict(SMOKE)
+    kw.update(overrides)
+    return run_open_loop(**kw)
+
+
+def latency_row(res: Dict) -> Dict[str, str]:
+    """CSV row shared by `benchmarks/run.py serving_latency` and
+    check_regression's --csv-append (one measurement, two consumers)."""
+    dec = res["roofline_error"].get("decode", {})
+    pre = res["roofline_error"].get("prefill", {})
+    return row(
+        "serving_latency",
+        res["itl_ms"]["mean"] * 1e3 if res["itl_ms"].get("mean") else 0.0,
+        f"rate={res['rate_req_s']} ttft_p50_ms={res['ttft_ms']['p50']} "
+        f"ttft_p99_ms={res['ttft_ms']['p99']} "
+        f"itl_p50_ms={res['itl_ms']['p50']} itl_p99_ms={res['itl_ms']['p99']} "
+        f"itl_tail={res['itl_tail_ratio']} tok_s={res['tok_s']} "
+        f"roof_decode_p90={dec.get('p90_ratio', 'na')} "
+        f"roof_prefill_p90={pre.get('p90_ratio', 'na')}",
+    )
+
+
+def bench_serving_latency() -> List[Dict[str, str]]:
+    return [latency_row(serving_latency_results())]
+
+
+def _print_table(res: Dict) -> None:
+    print(f"open-loop: {res['n_requests']} requests at {res['rate_req_s']} "
+          f"req/s, {res['n_tokens']} tokens, {res['tok_s']} tok/s "
+          f"(chunk={res['chunk']}, slots={res['max_slots']}, "
+          f"w={res['fmt']}, kv={res['kv_quant']})")
+    hdr = f"{'metric':<12}{'p50':>10}{'p90':>10}{'p99':>10}{'mean':>10}"
+    print(hdr)
+    for label, d in (("ttft_ms", res["ttft_ms"]), ("itl_ms", res["itl_ms"])):
+        print(f"{label:<12}{d['p50']:>10.3f}{d['p90']:>10.3f}"
+              f"{d['p99']:>10.3f}{d.get('mean', float('nan')):>10.3f}")
+    print(f"itl tail ratio (p99/mean): {res['itl_tail_ratio']}")
+    print("roofline predicted-vs-measured (ratio = measured/predicted, "
+          "calibrated):")
+    print(f"{'regime':<32}{'n':>5}{'geomean':>10}{'p90':>10}{'max|log2|':>11}")
+    for k, v in res["roofline_error"].items():
+        print(f"{k:<32}{v['n']:>5}{v['geomean_ratio']:>10.3f}"
+              f"{v['p90_ratio']:>10.3f}{v['max_abs_log2']:>11.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="Poisson arrival rate, requests/sec")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--max-slots", type=int, default=8)
+    ap.add_argument("--format", default="mxfp4_100",
+                    help="weight compression format ('dense' for none)")
+    ap.add_argument("--kv-quant", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI preset: low rate, few requests, small chunks")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="export the scheduler/request timeline as Chrome "
+                         "trace JSON (open in Perfetto)")
+    ap.add_argument("--csv", metavar="FILE", default=None,
+                    help="append the summary as a benchmarks/run.py CSV row")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="write the full result dict (BENCH_PR6.json shape)")
+    args = ap.parse_args()
+
+    kw = dict(rate=args.rate, n_requests=args.requests, max_new=args.max_new,
+              chunk=args.chunk, max_slots=args.max_slots, fmt=args.format,
+              kv_quant=args.kv_quant, seed=args.seed, trace_path=args.trace)
+    if args.smoke:
+        kw.update(SMOKE)
+        kw["trace_path"] = args.trace
+    res = run_open_loop(**kw)
+    _print_table(res)
+    if args.trace:
+        print(f"chrome trace written to {args.trace}")
+    if args.csv:
+        from benchmarks.common import csv_line
+
+        with open(args.csv, "a") as f:
+            f.write(csv_line(latency_row(res)) + "\n")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,10 @@ Benchmarks:
     paged_attention  BENCH_PR5.json — fused length-bounded paged-attention
                      decode vs the gather-read attention at long contexts
                      (prompts >= 512, DESIGN.md §13)
+    serving_latency  BENCH_PR6.json — open-loop Poisson-arrival latency
+                     (DESIGN.md §14): guards the p99-ITL tail ratio
+                     (p99/mean inter-token latency), the machine-portable
+                     shape of client-visible decode latency
 """
 from __future__ import annotations
 
@@ -43,6 +47,49 @@ def _paged_attention():
     return paged_attention_results(), paged_attention_row
 
 
+def _serving_latency():
+    from benchmarks.bench_latency import latency_row, serving_latency_results
+
+    return serving_latency_results(), latency_row
+
+
+def _check_speedup(name: str, base, res) -> bool:
+    """Default guard: the optimized path must retain at least half the
+    committed speedup over its in-tree baseline path (floor 1.2x)."""
+    need = max(1.2, 0.5 * base["speedup"])
+    print(
+        f"[{name}] baseline: {base['decode_tok_s_before']} -> "
+        f"{base['decode_tok_s_after']} tok/s ({base['speedup']}x)\n"
+        f"[{name}] this run: {res['decode_tok_s_before']} -> "
+        f"{res['decode_tok_s_after']} tok/s ({res['speedup']}x)\n"
+        f"[{name}] required speedup: >= {need:.2f}x"
+    )
+    if res["speedup"] < need:
+        print(f"[{name}] REGRESSION: speedup fell below the guard")
+        return False
+    return True
+
+
+def _check_itl_tail(name: str, base, res) -> bool:
+    """Latency guard: absolute ms are machine-bound, so hold the tail
+    *shape* — p99 inter-token latency over mean inter-token latency. With
+    chunked decode this sits near the chunk size (tokens burst once per
+    chunk); a scheduler change that stalls decode rounds shows up here
+    long before aggregate tok/s moves."""
+    need = max(6.0, 2.0 * base["itl_tail_ratio"])
+    print(
+        f"[{name}] baseline: itl p99/mean = {base['itl_tail_ratio']} "
+        f"(p99 {base['itl_ms']['p99']} ms at {base['rate_req_s']} req/s)\n"
+        f"[{name}] this run: itl p99/mean = {res['itl_tail_ratio']} "
+        f"(p99 {res['itl_ms']['p99']} ms)\n"
+        f"[{name}] required tail ratio: <= {need:.2f}"
+    )
+    if not res["itl_tail_ratio"] <= need:  # catches nan too
+        print(f"[{name}] REGRESSION: p99-ITL tail ratio blew past the guard")
+        return False
+    return True
+
+
 MANIFEST = {
     "decode_chunk": {
         "baseline": "BENCH_PR4.json",
@@ -55,6 +102,7 @@ MANIFEST = {
             "after = batched prefill + device-resident chunked decode + "
             "decode-shaped GeMV + fused paged attention"
         ),
+        "check": _check_speedup,
     },
     "paged_attention": {
         "baseline": "BENCH_PR5.json",
@@ -67,6 +115,20 @@ MANIFEST = {
             "materialized per token), after = fused dequantize-on-read "
             "page walk bounded by each slot's used page count"
         ),
+        "check": _check_speedup,
+    },
+    "serving_latency": {
+        "baseline": "BENCH_PR6.json",
+        "run": _serving_latency,
+        "note": (
+            "open-loop latency smoke (Poisson arrivals, 10 requests at 6 "
+            "req/s, prompts 8-32, 12 new tokens, chunk=4, max_slots=4, "
+            "mxfp4_100 weights): per-request TTFT/ITL percentiles from "
+            "token-visibility timestamps + RoofLens roofline "
+            "predicted-vs-measured error per regime; the guard holds the "
+            "machine-portable p99/mean ITL tail ratio"
+        ),
+        "check": _check_itl_tail,
     },
 }
 
@@ -91,16 +153,7 @@ def run_guard(name: str, *, update: bool, csv_append) -> bool:
         return True
 
     base = json.loads(path.read_text())
-    need = max(1.2, 0.5 * base["speedup"])
-    print(
-        f"[{name}] baseline: {base['decode_tok_s_before']} -> "
-        f"{base['decode_tok_s_after']} tok/s ({base['speedup']}x)\n"
-        f"[{name}] this run: {res['decode_tok_s_before']} -> "
-        f"{res['decode_tok_s_after']} tok/s ({res['speedup']}x)\n"
-        f"[{name}] required speedup: >= {need:.2f}x"
-    )
-    if res["speedup"] < need:
-        print(f"[{name}] REGRESSION: speedup fell below the guard")
+    if not entry["check"](name, base, res):
         return False
     print(f"[{name}] OK")
     return True

@@ -69,7 +69,17 @@ def main():
     ap.add_argument("--kv-quant", default=None, metavar="FMT",
                     help="quantize the KV cache with any KV-capable codec "
                          "from repro.core.codecs (bf8/int8/int4/mxfp4/nf4)")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="record the request lifecycle and export a Chrome "
+                         "trace (open in Perfetto); implies --paged")
+    ap.add_argument("--metrics", action="store_true",
+                    help="attach a metrics registry and dump the "
+                         "serve.* counters/gauges/histograms after the "
+                         "run; implies --paged")
     args = ap.parse_args()
+    if args.trace or args.metrics:
+        # request-lifecycle observability lives in the paged scheduler path
+        args.paged = True
 
     cfg = get_smoke_config("llama3-8b")
     model = Model(cfg)
@@ -92,11 +102,16 @@ def main():
         # mixed-length traffic: each request holds ceil(len/block_size) KV
         # pages instead of a max_len ring slot
         lengths = [int(x) for x in rng.integers(8, 49, args.batch)]
+        obs = None
+        if args.trace or args.metrics:
+            from repro.obs import Observability
+
+            obs = Observability.default()
         engine = GenerationEngine(model, cparams, max_len=128,
                                   temperature=0.0, mesh=mesh,
                                   block_size=args.block_size, max_slots=4,
                                   kv_quant=args.kv_quant,
-                                  decode_chunk=args.chunk)
+                                  decode_chunk=args.chunk, obs=obs)
         if args.kv_quant:
             print(f"KV pools quantized with {args.kv_quant}: "
                   f"{engine.kv.bytes_per_token():.0f} B/token (all layers)")
@@ -117,6 +132,29 @@ def main():
               f"peak_blocks={st['peak_blocks']} "
               f"mean_occupancy={st['mean_occupancy']:.2f} "
               f"padding_waste_saved={st['padding_waste_saved']:.2%}")
+        if obs is not None:
+            # client-visible latency: TTFT from submit to the prefill
+            # sample, ITL from token-visibility deltas (bursty per chunk)
+            s = obs.tracer.summary()
+            print(f"request lifecycle ({s['n_requests']} finished, "
+                  f"{s['n_tokens']} tokens):")
+            print(f"{'metric':<16}{'p50':>10}{'p90':>10}{'p99':>10}")
+            for name in ("ttft_s", "itl_s", "queue_wait_s"):
+                d = s[name]
+                label = name.replace("_s", "_ms")
+                print(f"{label:<16}{d['p50'] * 1e3:>10.3f}"
+                      f"{d['p90'] * 1e3:>10.3f}{d['p99'] * 1e3:>10.3f}")
+        if args.trace:
+            obs.tracer.export_chrome_trace(args.trace)
+            print(f"chrome trace written to {args.trace} (open in Perfetto)")
+        if args.metrics:
+            print("metrics registry snapshot:")
+            for name, m in sorted(obs.metrics.snapshot().items()):
+                fields = " ".join(
+                    f"{k}={v:.6g}" if isinstance(v, float) else f"{k}={v}"
+                    for k, v in m.items() if k != "type"
+                )
+                print(f"  [{m['type']:>9}] {name}: {fields}")
         print("sample:", done[rids[0]][:12].tolist())
         return
 

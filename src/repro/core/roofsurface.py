@@ -48,6 +48,14 @@ class HardwareProfile:
     n_chips: int = 1  # informational
     ici_bw: float = 0.0  # per-chip interconnect bandwidth, bytes/s (TPU only)
 
+    @property
+    def peak_flops(self) -> float:
+        """FMA/s at saturating batch — the MOS tile rate re-expressed in
+        the flops domain (inverse of the TPU_V5E `mos` construction), so
+        time-domain consumers (`surface_step_time`, obs/rooflens) don't
+        each re-derive the 512 * 16 tile constant."""
+        return self.mos * FLOPS_PER_TILE_PER_BATCH * 16
+
     def scaled(self, *, vos_mult: float = 1.0, cores_mult: float = 1.0,
                name: Optional[str] = None) -> "HardwareProfile":
         return dataclasses.replace(
@@ -327,6 +335,31 @@ def paged_attention_point(
         flops=FLOPS_PER_TILE_PER_BATCH * min(batch_n, 16) * tps,
         bound=bound, rates=rates,
     )
+
+
+def surface_step_time(
+    profile: HardwareProfile,
+    *,
+    flops: float,
+    hbm_bytes: float,
+    vector_ops: float = 0.0,
+    collective_bytes: float = 0.0,
+    n_chips: int = 1,
+) -> float:
+    """Predicted wall seconds for one step's traffic on the Roof-Surface:
+    the time-domain max over the same terms `evaluate` rates —
+    max(T_mtx, T_mem, T_vec, T_ici). This is the single conversion point
+    from counted traffic to predicted latency; `obs/rooflens.py` builds its
+    per-step serving predictions on it and validates them against measured
+    wall time (DESIGN.md §14)."""
+    t = max(
+        flops / (n_chips * profile.peak_flops),
+        hbm_bytes / (n_chips * profile.mbw),
+        vector_ops / (n_chips * profile.vos) if vector_ops else 0.0,
+    )
+    if collective_bytes and profile.ici_bw:
+        t = max(t, collective_bytes / (n_chips * profile.ici_bw))
+    return t
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,59 @@
+"""Serving observability (DESIGN.md §14): metrics, tracing, roofline lens.
+
+Three independent collectors, bundled by `Observability` and installed with
+one engine argument:
+
+    from repro.obs import Observability
+    obs = Observability.default()
+    engine = GenerationEngine(model, params, obs=obs, ...)
+    ...
+    obs.tracer.summary()            # TTFT / ITL percentiles
+    obs.tracer.export_chrome_trace("trace.json")   # open in Perfetto
+    obs.rooflens.error_report()     # roofline predicted-vs-measured
+    obs.metrics.snapshot()          # counters / gauges / histograms
+
+Design rule: observability is a layer, not printf. Every instrumentation
+site in the serving stack is guarded (`if obs is None: ...` — no
+allocation, no clock read, no device op when nothing is installed), and no
+collector ever touches a jitted function — the decode chunk's jaxpr is
+bit-identical with and without observers (tests/test_obs.py proves it).
+All three collectors share one injectable monotonic clock so cross-
+collector timestamps agree and tests are deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+from .metrics import (  # noqa: F401
+    Counter, Gauge, Histogram, MetricsRegistry, exact_percentiles,
+)
+from .rooflens import RoofLens  # noqa: F401
+from .trace import RequestTrace, Tracer  # noqa: F401
+
+
+@dataclasses.dataclass
+class Observability:
+    """Collector bundle the serving stack instruments against. Any field
+    may be None — each site checks what it needs. `clock` is the shared
+    timestamp source for sites that time spans for more than one
+    collector."""
+
+    metrics: Optional[MetricsRegistry] = None
+    tracer: Optional[Tracer] = None
+    rooflens: Optional[RoofLens] = None
+    clock: Callable[[], float] = time.perf_counter
+
+    @classmethod
+    def default(cls, clock: Optional[Callable[[], float]] = None,
+                profile=None) -> "Observability":
+        """All three collectors on one (optionally fake) clock."""
+        clk = clock if clock is not None else time.perf_counter
+        metrics = MetricsRegistry(clock=clk)
+        return cls(
+            metrics=metrics,
+            tracer=Tracer(clock=clk),
+            rooflens=RoofLens(profile, registry=metrics),
+            clock=clk,
+        )

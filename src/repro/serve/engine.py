@@ -187,6 +187,14 @@ class GenerationEngine:
     per token. `decode_chunk=1` restores the single-step loop (the golden
     reference in tests). `prefill_batch=False` likewise restores one jit
     call per admitted request (the pre-PR4 baseline in benchmarks).
+
+    `obs` installs a `repro.obs.Observability` bundle (DESIGN.md §14):
+    request-lifecycle tracing (TTFT/ITL, Chrome trace export), the metrics
+    registry, and the RoofLens predicted-vs-measured loop — the engine
+    binds the lens to this model's geometry (weight-stream bytes, codec,
+    decode batch rows, chip count). Observability is host-side only: it
+    never enters a jitted function, and with `obs=None` (the default) the
+    serving loop takes the exact pre-PR6 path.
     """
 
     def __init__(
@@ -206,6 +214,7 @@ class GenerationEngine:
         kv_quant: Optional[str] = None,
         decode_chunk: int = 8,
         prefill_batch: bool = True,
+        obs=None,
     ):
         if kv_quant is not None and kv_quant != model.cfg.kv_quant:
             # end-to-end kv_quant plumbing: the format name is a codec-
@@ -227,6 +236,10 @@ class GenerationEngine:
         self._base_key = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(make_prefill_step(model, cache_len=max_len))
         self._decode = jax.jit(make_decode_step(model))
+
+        self.obs = obs
+        if obs is not None and obs.rooflens is not None:
+            self._bind_rooflens(obs.rooflens, max_slots)
 
         attn_only = all(k in ("attn", "attn_local") for k in model.kinds)
         if paged == "auto":
@@ -273,12 +286,38 @@ class GenerationEngine:
                 local_window=(
                     self.cfg.window if all_local and self.cfg.window > 0 else None
                 ),
+                obs=obs,
             )
 
     def _mesh_scope(self):
         if self.mesh is None:
             return contextlib.nullcontext()
         return sh.use_mesh(self.mesh, fsdp=self.fsdp, mode="serve")
+
+    def _bind_rooflens(self, lens, max_slots: int) -> None:
+        """Bind the RoofLens predicted-vs-measured model (DESIGN.md §14) to
+        this engine's traffic shape: stored weight-stream bytes (compressed
+        leaves count their packed planes via `.nbytes` — no device
+        transfer), the dense element count behind them (sizes the
+        decompression vector-op term), weight/KV codecs, decode batch rows,
+        and the chip count the streams are sharded over."""
+        from repro.core.compression import CompressedTensor
+
+        leaves = jax.tree_util.tree_leaves(
+            self.params, is_leaf=lambda x: isinstance(x, CompressedTensor)
+        )
+        compressed = [l for l in leaves if isinstance(l, CompressedTensor)]
+        lens.bind(
+            cfg=self.cfg,
+            weight_bytes=sum(int(l.nbytes) for l in leaves),
+            weight_elems=sum(
+                int(np.prod(ct.shape)) for ct in compressed
+            ),
+            weight_spec=compressed[0].spec.name if compressed else None,
+            kv_quant=self.kv_quant,
+            m_slots=max_slots,
+            n_chips=self.mesh.size if self.mesh is not None else 1,
+        )
 
     # ------------------------------------------------------------------
     # sampling: keyed per (request, token index) — admission order and

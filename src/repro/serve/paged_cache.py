@@ -110,6 +110,25 @@ class PagedKVCache:
         """Pages promised to admitted requests but not yet lazily allocated."""
         return sum(self._reserved.values())
 
+    def occupancy(self) -> Dict[str, int]:
+        """Defensive point-in-time snapshot of pool occupancy (all in
+        pages): used = allocated to live requests, free = on the free list,
+        reserved = promised to admitted requests but not yet lazily
+        allocated, admittable = free minus reserved (the admission-control
+        headroom `can_admit` checks against). The scheduler publishes these
+        as `serve.pool.*` gauges when a metrics registry is installed."""
+        used = self.allocator.used_count
+        free = self.allocator.free_count
+        reserved = self.reserved_blocks
+        return {
+            "used": used,
+            "free": free,
+            "reserved": reserved,
+            "admittable": free - reserved,
+            "total": self.num_blocks,
+            "tables": len(self._tables),
+        }
+
     def can_admit(self, kv_len: int) -> bool:
         return self.free_blocks - self.reserved_blocks >= self.blocks_for(kv_len)
 

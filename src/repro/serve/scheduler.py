@@ -42,6 +42,35 @@ def _pow2ceil(x: int) -> int:
     return 1 << max(0, x - 1).bit_length()
 
 
+#: Units for every key `Scheduler.stats()` can return (DESIGN.md §14's
+#: naming rule: a number is meaningless without its unit). Raw counters
+#: first, derived ratios/bytes after. tests/test_obs.py asserts the
+#: returned keys and this table never drift apart.
+STAT_UNITS: Dict[str, str] = {
+    "decode_steps": "steps (batch decode iterations actually counted)",
+    "decode_chunks": "calls (device-resident chunk launches, 1 per round)",
+    "host_syncs": "calls (device->host synchronizations: one per prefill "
+                  "call and one per decode round)",
+    "active_slot_steps": "slot*steps (decoded tokens across all requests)",
+    "paged_block_steps": "pages*steps (pool pages held, summed per step)",
+    "dense_block_steps": "pages*steps (what a max_len ring cache would hold)",
+    "peak_blocks": "pages (max pool pages held at any step)",
+    "prefill_calls": "calls (bucketed prefill launches)",
+    "prefill_token_steps": "tokens (padded token-steps launched in prefill)",
+    "prefill_real_tokens": "tokens (real prompt tokens prefilled)",
+    "kv_pages_read": "pages (decode-attention pages actually walked)",
+    "kv_pages_read_worst": "pages (max_blocks gather worst case)",
+    "window_freed_pages": "pages (released behind the attention window)",
+    "mean_occupancy": "ratio (active slot-steps / max_slots*steps)",
+    "mean_blocks": "pages (mean pool pages held per decode step)",
+    "padding_waste_saved": "ratio (ring-cache block-steps never allocated)",
+    "prefill_padding_waste": "ratio (padded prefill token-steps wasted)",
+    "kv_bytes_per_token": "bytes (pool footprint per token slot, all layers)",
+    "kv_read_bytes_per_token": "bytes (KV actually streamed per decoded token)",
+    "kv_read_bytes_per_token_worst": "bytes (max_blocks gather per token)",
+}
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -101,6 +130,7 @@ class Scheduler:
         chunk: int = 1,
         prefill_batch: bool = True,
         local_window: Optional[int] = None,
+        obs=None,
     ):
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
@@ -126,12 +156,20 @@ class Scheduler:
         self._next_rid = 0
         # occupancy / padding-waste accounting (benchmarks/run.py serving_paged)
         self._stats = {
-            "decode_steps": 0, "decode_chunks": 0, "active_slot_steps": 0,
+            "decode_steps": 0, "decode_chunks": 0, "host_syncs": 0,
+            "active_slot_steps": 0,
             "paged_block_steps": 0, "dense_block_steps": 0, "peak_blocks": 0,
             "prefill_calls": 0, "prefill_token_steps": 0,
             "prefill_real_tokens": 0,
             "kv_pages_read": 0, "kv_pages_read_worst": 0, "window_freed_pages": 0,
         }
+        # observability (DESIGN.md §14): every site below is guarded on the
+        # specific collector it feeds — with obs=None the serving loop does
+        # no clock reads, no allocation, and (always) no device work
+        self._obs_metrics = obs.metrics if obs is not None else None
+        self._obs_tracer = obs.tracer if obs is not None else None
+        self._obs_rooflens = obs.rooflens if obs is not None else None
+        self._obs_clock = obs.clock if obs is not None else None
 
     # ------------------------------------------------------------------
     # request API
@@ -165,6 +203,15 @@ class Scheduler:
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid, prompt, max_new_tokens, eos_id))
+        if self._obs_tracer is not None:
+            self._obs_tracer.on_submit(rid, len(prompt), max_new_tokens)
+        if self._obs_metrics is not None:
+            self._obs_metrics.counter(
+                "serve.requests.submitted", unit="requests"
+            ).inc()
+            self._obs_metrics.gauge(
+                "serve.queue_depth", unit="requests"
+            ).set(len(self.queue))
         return rid
 
     def run_until_drained(self) -> Dict[int, np.ndarray]:
@@ -184,6 +231,7 @@ class Scheduler:
         return len(r.prompt) + r.max_new_tokens - 1
 
     def _admit(self) -> None:
+        t0 = self._obs_clock() if self._obs_tracer is not None else 0.0
         admitted: List[tuple] = []
         for slot in range(self.max_slots):
             if self.slots[slot] is not None or not self.queue:
@@ -195,6 +243,18 @@ class Scheduler:
             self.cache.admit(r.rid, self._kv_len(r))
             self.slots[slot] = r
             admitted.append((slot, r))
+        if self._obs_tracer is not None and admitted:
+            t1 = self._obs_clock()
+            for slot, r in admitted:
+                self._obs_tracer.on_admit(r.rid, slot)
+            self._obs_tracer.on_admit_round(
+                t0, t1, len(admitted), len(self.queue)
+            )
+        if self._obs_metrics is not None and admitted:
+            self._obs_metrics.counter(
+                "serve.requests.admitted", unit="requests"
+            ).inc(len(admitted))
+            self._publish_gauges()
         if admitted:
             if self.prefill_batch:
                 self._prefill_batch(admitted)
@@ -252,18 +312,38 @@ class Scheduler:
             last_idx[row] = p - 1
             rids[row] = r.rid
         fresh = self.cache.drain_fresh(b * pages)
+        observing = (
+            self._obs_tracer is not None or self._obs_rooflens is not None
+            or self._obs_metrics is not None
+        )
+        t0 = self._obs_clock() if observing else 0.0
         logits = self._prefill(
             tokens, positions, tables, write_slots, write_pos, fresh, last_idx
         )
         toks = self._sample(logits, rids, np.zeros(b, np.int64))
+        # `toks` is host-side: the sample call above was the device->host
+        # sync, so t1 - t0 is the full prefill wall time incl. sampling
+        t1 = self._obs_clock() if observing else 0.0
         for row, (_, r) in enumerate(admitted):
             r.out.append(int(toks[row]))
             r.peak_blocks = max(r.peak_blocks, self.cache.blocks_held(r.rid))
 
         st = self._stats
         st["prefill_calls"] += 1
+        st["host_syncs"] += 1
         st["prefill_token_steps"] += b * sp
         st["prefill_real_tokens"] += sum(len(r.prompt) for _, r in admitted)
+        if self._obs_tracer is not None:
+            self._obs_tracer.on_prefill(
+                t0, t1, [r.rid for _, r in admitted], b, sp
+            )
+        if self._obs_rooflens is not None:
+            self._obs_rooflens.observe_prefill(b, sp, t1 - t0)
+        if self._obs_metrics is not None:
+            self._obs_metrics.histogram(
+                "serve.prefill.wall_s", unit="s"
+            ).record(t1 - t0)
+            self._obs_metrics.counter("serve.host_syncs", unit="calls").inc()
 
     # ------------------------------------------------------------------
     # decode: single-step (chunk == 1) or device-resident chunk
@@ -298,16 +378,26 @@ class Scheduler:
             rids[i] = r.rid
             steps[i] = len(r.out)
         fresh = self.cache.drain_fresh(m)
+        observing = (
+            self._obs_tracer is not None or self._obs_rooflens is not None
+            or self._obs_metrics is not None
+        )
+        t0 = self._obs_clock() if observing else 0.0
         logits = self._decode(
             tokens, positions, tables, write_slots, write_pos, fresh, kv_lens
         )
         toks = self._sample(logits, rids, steps)
+        t1 = self._obs_clock() if observing else 0.0
         for i, r in active:
             r.out.append(int(toks[i]))
             r.peak_blocks = max(r.peak_blocks, self.cache.blocks_held(r.rid))
 
         self._account_decode(1, len(active))
         self._account_kv_read(int(kv_lens[i]) for i, _ in active)
+        self._observe_decode(
+            t0, t1, 1, {r.rid: 1 for _, r in active},
+            [int(kv_lens[i]) for i, _ in active],
+        )
 
         for i, r in active:
             if self._finished(r):
@@ -367,10 +457,16 @@ class Scheduler:
         fresh = np.zeros((c, f), np.int32)
         fresh[0] = self.cache.drain_fresh(f)
 
+        observing = (
+            self._obs_tracer is not None or self._obs_rooflens is not None
+            or self._obs_metrics is not None
+        )
+        t0 = self._obs_clock() if observing else 0.0
         toks = self._decode_chunk(
             tokens0, tables, positions, write_slots, write_pos, fresh,
             kv_lens, rids, start_steps, max_steps, eos, act,
-        )  # (c, m) np.int32
+        )  # (c, m) np.int32 — host-side: the chunk's one device->host sync
+        t1 = self._obs_clock() if observing else 0.0
 
         steps_taken: Dict[int, int] = {}
         for i, r in active:
@@ -382,6 +478,12 @@ class Scheduler:
             r.peak_blocks = max(r.peak_blocks, self.cache.blocks_held(r.rid))
 
         self._account_decode_chunk(active, steps_taken, used0, held0, p0s, c)
+        # the fixed-shape scan always runs all c steps, so the roofline
+        # prediction is over c; the tracer gets only the kept tokens
+        self._observe_decode(
+            t0, t1, c, {r.rid: steps_taken[i] for i, r in active},
+            [p0s[i] + 1 for i, _ in active],
+        )
 
         for i, r in active:
             if self._finished(r):
@@ -406,6 +508,7 @@ class Scheduler:
         between chunk settings."""
         st = self._stats
         st["decode_chunks"] += 1
+        st["host_syncs"] += 1
         bs = self.cache.block_size
         used = used0
         grown = dict.fromkeys(held0, 0)  # pages newly landed per slot
@@ -435,6 +538,7 @@ class Scheduler:
         st = self._stats
         st["decode_steps"] += steps
         st["decode_chunks"] += 1
+        st["host_syncs"] += 1
         st["active_slot_steps"] += slot_steps
         used = self.cache.allocator.used_count
         st["paged_block_steps"] += used * steps
@@ -466,6 +570,41 @@ class Scheduler:
             st["kv_pages_read"] += pages
             st["kv_pages_read_worst"] += self.max_blocks
 
+    def _observe_decode(self, t0: float, t1: float, steps: int,
+                        kept: Dict[int, int], kv_lens: List[int]) -> None:
+        """Feed one decode round to whichever collectors are installed
+        (DESIGN.md §14). `steps` is scan steps launched, `kept` the tokens
+        each request keeps, `kv_lens` the active slots' context lengths at
+        round start. No-op (and never called with clock reads) when no
+        collector is installed."""
+        if self._obs_tracer is not None:
+            self._obs_tracer.on_decode_chunk(t0, t1, steps, kept)
+        if self._obs_rooflens is not None:
+            self._obs_rooflens.observe_decode(kv_lens, steps, t1 - t0)
+        if self._obs_metrics is not None:
+            m = self._obs_metrics
+            m.histogram("serve.decode.chunk_wall_s", unit="s").record(t1 - t0)
+            m.counter("serve.host_syncs", unit="calls").inc()
+            m.counter("serve.decode.tokens", unit="tokens").inc(
+                sum(kept.values())
+            )
+            self._publish_gauges()
+
+    def _publish_gauges(self) -> None:
+        """Pool / queue occupancy gauges (metrics registry installed)."""
+        m = self._obs_metrics
+        m.gauge("serve.queue_depth", unit="requests").set(len(self.queue))
+        occ = self.cache.occupancy()
+        m.gauge("serve.pool.used_pages", unit="pages").set(occ["used"])
+        m.gauge("serve.pool.free_pages", unit="pages").set(occ["free"])
+        m.gauge("serve.pool.reserved_pages", unit="pages").set(occ["reserved"])
+        m.gauge("serve.pool.admittable_pages", unit="pages").set(
+            occ["admittable"]
+        )
+        m.gauge("serve.slots.active", unit="slots").set(
+            sum(1 for r in self.slots if r is not None)
+        )
+
     def _free_window_pages(self) -> None:
         """Window-aware page freeing (all-local-attention stacks only):
         a key at position p is visible to query q iff p > q - window, and
@@ -494,11 +633,30 @@ class Scheduler:
         self.request_peaks[r.rid] = r.peak_blocks
         self.cache.release(r.rid)
         self.slots[slot] = None
+        if self._obs_tracer is not None:
+            reason = (
+                "eos" if r.eos_id is not None and r.out
+                and r.out[-1] == r.eos_id else "length"
+            )
+            self._obs_tracer.on_finish(r.rid, reason)
+        if self._obs_metrics is not None:
+            self._obs_metrics.counter(
+                "serve.requests.finished", unit="requests"
+            ).inc()
 
     # ------------------------------------------------------------------
     # occupancy / padding-waste report
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
+        """Defensive snapshot of the serving counters plus derived ratios.
+
+        The returned dict is freshly built on every call and shares no
+        state with the scheduler — callers may mutate or hold it without
+        affecting later snapshots (the PR 4 ad-hoc dict aliased nothing
+        either, but that was an accident of `dict()`, not a contract; now
+        it is the contract, test-enforced). Every key's unit is documented
+        in `STAT_UNITS`; when a metrics registry is installed the snapshot
+        is also folded into it as `serve.stats.*` gauges."""
         st = dict(self._stats)
         steps = max(1, st["decode_steps"])
         st["mean_occupancy"] = st["active_slot_steps"] / (steps * self.max_slots)
@@ -526,4 +684,10 @@ class Scheduler:
         st["kv_read_bytes_per_token_worst"] = (
             st["kv_pages_read_worst"] * page_bytes / toks
         )
+        assert set(st) <= set(STAT_UNITS), (
+            f"undocumented stats keys: {set(st) - set(STAT_UNITS)} — "
+            "add units to STAT_UNITS"
+        )
+        if self._obs_metrics is not None:
+            self._obs_metrics.ingest("serve.stats", st, units=STAT_UNITS)
         return st
