@@ -172,8 +172,9 @@ def _drain_decode_tok_s(engine, prompts, n_steps: int) -> float:
     """Decode tokens/sec with prefill excluded: the first scheduler step
     (admission + batched prefill + first decode chunk) is warm-up; the
     remaining pure-decode rounds are timed. This is the per-token hot path
-    the fused page walk targets — prefill keeps the gather-read path by
-    design (chunked prefill is a separate ROADMAP item)."""
+    the fused page walk targets — monolithic prefill keeps the gather-read
+    path by design (the chunked-prefill path, `prefill_chunk`, bounds its
+    tables like decode and is benchmarked in bench_prefix.py)."""
     sch = engine.scheduler
     for p in prompts:
         engine.submit(p, max_new_tokens=n_steps)

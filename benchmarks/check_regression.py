@@ -21,6 +21,10 @@ Benchmarks:
                      (DESIGN.md §14): guards the p99-ITL tail ratio
                      (p99/mean inter-token latency), the machine-portable
                      shape of client-visible decode latency
+    prefix_serving   BENCH_PR7.json — multi-tenant prefix cache
+                     (DESIGN.md §15): steady-state shared-prefix traffic,
+                     prefix-hit TTFT must strictly beat cold TTFT and the
+                     peak KV pool bytes must be strictly lower
 """
 from __future__ import annotations
 
@@ -51,6 +55,12 @@ def _serving_latency():
     from benchmarks.bench_latency import latency_row, serving_latency_results
 
     return serving_latency_results(), latency_row
+
+
+def _prefix_serving():
+    from benchmarks.bench_prefix import prefix_row, prefix_serving_results
+
+    return prefix_serving_results(), prefix_row
 
 
 def _check_speedup(name: str, base, res) -> bool:
@@ -88,6 +98,36 @@ def _check_itl_tail(name: str, base, res) -> bool:
         print(f"[{name}] REGRESSION: p99-ITL tail ratio blew past the guard")
         return False
     return True
+
+
+def _check_prefix(name: str, base, res) -> bool:
+    """Prefix-cache guard: two machine-portable shapes. A prefix hit must
+    strictly beat a cold prefill to first token (retaining at least a
+    quarter of the committed TTFT-p50 margin — TTFT on the smoke model is
+    noisier than throughput, so the guard keeps headroom), and steady-state
+    shared-prefix traffic must peak at strictly fewer KV pool bytes than
+    the duplicate-per-tenant cold engine (pool pages are machine-invariant
+    — same pool, same traffic, same seed)."""
+    need = max(1.0, 1.0 + 0.25 * (base["ttft_p50_speedup"] - 1.0))
+    print(
+        f"[{name}] baseline: ttft p50 speedup {base['ttft_p50_speedup']}x, "
+        f"pool bytes ratio {base['pool_bytes_ratio']}\n"
+        f"[{name}] this run: ttft p50 speedup {res['ttft_p50_speedup']}x "
+        f"(cold {res['cold']['ttft_ms']['p50']} ms -> prefix "
+        f"{res['prefix']['ttft_ms']['p50']} ms), "
+        f"pool bytes ratio {res['pool_bytes_ratio']} "
+        f"({res['cold']['peak_pool_bytes']} -> "
+        f"{res['prefix']['peak_pool_bytes']} B)\n"
+        f"[{name}] required: speedup > {need:.3f}, pool ratio < 1.0"
+    )
+    ok = True
+    if not res["ttft_p50_speedup"] > need:  # catches nan too
+        print(f"[{name}] REGRESSION: prefix-hit TTFT no longer beats cold")
+        ok = False
+    if not res["pool_bytes_ratio"] < 1.0:
+        print(f"[{name}] REGRESSION: shared pages no longer shrink the pool")
+        ok = False
+    return ok
 
 
 MANIFEST = {
@@ -129,6 +169,21 @@ MANIFEST = {
             "machine-portable p99/mean ITL tail ratio"
         ),
         "check": _check_itl_tail,
+    },
+    "prefix_serving": {
+        "baseline": "BENCH_PR7.json",
+        "run": _prefix_serving,
+        "note": (
+            "multi-tenant prefix-cache smoke (16 requests over 2 shared "
+            "96-token system prompts with 3-8 token unique tails, 6 new "
+            "tokens, max_slots=4, block_size=8, mxfp4_100 weights), "
+            "steady-state: prefixes seeded and drained before the timed "
+            "flood; cold = prefix_cache off (every request prefills its "
+            "full prompt, shared pages duplicated per slot), prefix = "
+            "radix-index prefix reuse + copy-on-write; guards TTFT-p50 "
+            "speedup and the peak-pool-bytes ratio"
+        ),
+        "check": _check_prefix,
     },
 }
 

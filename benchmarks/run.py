@@ -9,6 +9,7 @@ from __future__ import annotations
 import sys
 
 from benchmarks import bench_latency as bl
+from benchmarks import bench_prefix as bp
 from benchmarks import bench_paper_tables as pt
 from benchmarks import bench_serving as bs
 from benchmarks import bench_tpu_fused as tf
@@ -32,6 +33,7 @@ ALL = [
     ("serving_decode", bs.bench_decode_throughput),
     ("paged_attention", bs.bench_paged_attention_decode),
     ("serving_latency", bl.bench_serving_latency),
+    ("prefix_serving", bp.bench_prefix_serving),
 ]
 
 

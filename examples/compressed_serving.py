@@ -69,6 +69,18 @@ def main():
     ap.add_argument("--kv-quant", default=None, metavar="FMT",
                     help="quantize the KV cache with any KV-capable codec "
                          "from repro.core.codecs (bf8/int8/int4/mxfp4/nf4)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="multi-tenant prefix sharing: keep finished "
+                         "prompts' KV pages in a radix index, admit later "
+                         "requests against their longest cached prefix "
+                         "(copy-on-write on divergence); submits shared-"
+                         "prefix traffic and reports hit/CoW stats; "
+                         "implies --paged")
+    ap.add_argument("--prefill-chunk", type=int, default=None, metavar="N",
+                    help="chunked prefill: at most N prompt tokens per "
+                         "request per scheduler round, interleaved with "
+                         "decode (default: whole prompt in one launch); "
+                         "implies --paged")
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="record the request lifecycle and export a Chrome "
                          "trace (open in Perfetto); implies --paged")
@@ -77,8 +89,8 @@ def main():
                          "serve.* counters/gauges/histograms after the "
                          "run; implies --paged")
     args = ap.parse_args()
-    if args.trace or args.metrics:
-        # request-lifecycle observability lives in the paged scheduler path
+    if args.trace or args.metrics or args.prefix_cache or args.prefill_chunk:
+        # these features all live in the paged scheduler path
         args.paged = True
 
     cfg = get_smoke_config("llama3-8b")
@@ -102,6 +114,11 @@ def main():
         # mixed-length traffic: each request holds ceil(len/block_size) KV
         # pages instead of a max_len ring slot
         lengths = [int(x) for x in rng.integers(8, 49, args.batch)]
+        sys_prompt = None
+        if args.prefix_cache:
+            # shared-prefix traffic: one 32-token system prompt fronts
+            # every request — the shape the radix index exists to win
+            sys_prompt = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
         obs = None
         if args.trace or args.metrics:
             from repro.obs import Observability
@@ -111,13 +128,21 @@ def main():
                                   temperature=0.0, mesh=mesh,
                                   block_size=args.block_size, max_slots=4,
                                   kv_quant=args.kv_quant,
-                                  decode_chunk=args.chunk, obs=obs)
+                                  decode_chunk=args.chunk,
+                                  prefix_cache=args.prefix_cache,
+                                  prefill_chunk=args.prefill_chunk, obs=obs)
         if args.kv_quant:
             print(f"KV pools quantized with {args.kv_quant}: "
                   f"{engine.kv.bytes_per_token():.0f} B/token (all layers)")
+
+        def make_prompt(n):
+            tail = rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            if sys_prompt is None:
+                return tail
+            return np.concatenate([sys_prompt, tail])
+
         rids = [
-            engine.submit(rng.integers(0, cfg.vocab_size, n).astype(np.int32),
-                          max_new_tokens=args.steps)
+            engine.submit(make_prompt(n), max_new_tokens=args.steps)
             for n in lengths
         ]
         t0 = time.perf_counter()
@@ -132,6 +157,14 @@ def main():
               f"peak_blocks={st['peak_blocks']} "
               f"mean_occupancy={st['mean_occupancy']:.2f} "
               f"padding_waste_saved={st['padding_waste_saved']:.2%}")
+        if args.prefix_cache:
+            occ = engine.kv.occupancy()
+            print(f"prefix cache: hit_tokens={st['prefix_hit_tokens']} "
+                  f"cow_copies={st['cow_copies']} "
+                  f"cached_pages={occ['cached']} shared_pages={occ['shared']}")
+        if args.prefill_chunk:
+            print(f"chunked prefill: {st['prefill_chunk_calls']} chunk "
+                  f"launches of <= {args.prefill_chunk} tokens/request")
         if obs is not None:
             # client-visible latency: TTFT from submit to the prefill
             # sample, ITL from token-visibility deltas (bursty per chunk)

@@ -367,6 +367,7 @@ def paged_update_cache(
     write_pos: jax.Array,  # (B, S) int32; CACHE_EMPTY_POS for pad tokens
     write_slots: jax.Array,  # (B, S) int32 flat slot ids (block * bsize + off)
     fresh_pages: Optional[jax.Array] = None,  # (F,) page ids, 0 = none
+    copy_pages: Optional[jax.Array] = None,   # (C, 2) (src, dst) page ids
     quant: str = "none",
 ) -> Dict[str, jax.Array]:
     """Scatter S tokens per request into the shared pool. Slot ids are
@@ -377,13 +378,25 @@ def paged_update_cache(
     their position plane is scrubbed to the empty sentinel *before* the
     scatter, so a page recycled from an evicted request can never leak the
     old tenant's KV entries into a gather-read. Entry 0 (the null page,
-    always empty) pads the fixed shape."""
+    always empty) pads the fixed shape.
+
+    `copy_pages` lists copy-on-write clones queued by the host allocator:
+    each (src, dst) row copies every pool plane of page `src` into page
+    `dst` *before* the scrub and the scatter, so a write diverging from a
+    prefix-shared page lands in a private clone while sibling requests keep
+    reading the untouched original. Padding rows are (0, 0) — a null-page
+    self-copy, the identity."""
     codec = _kv_codec(quant)
     _check_cache_quant(cache["kp"].dtype, codec, quant)
     ks = vs = None
     if codec is not None:
         k, ks = codec.kv_encode(k)
         v, vs = codec.kv_encode(v)
+    if copy_pages is not None:
+        src, dst = copy_pages[:, 0], copy_pages[:, 1]
+        cache = {
+            name: pool.at[dst].set(pool[src]) for name, pool in cache.items()
+        }
     nb, bs, hkv, width = cache["kp"].shape
     flat = write_slots.reshape(-1)
 
@@ -452,6 +465,7 @@ def paged_attention_block(
     write_pos: jax.Array,      # (B, S)
     fresh_pages: Optional[jax.Array] = None,  # (F,)
     kv_lens: Optional[jax.Array] = None,      # (B,) valid KV tokens per slot
+    copy_pages: Optional[jax.Array] = None,   # (C, 2) CoW (src, dst) pages
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Attention layer against the paged pool: proj -> per-request rope ->
     scatter into pool -> read -> attn -> out.
@@ -487,7 +501,8 @@ def paged_attention_block(
         tok_pos = positions if positions.ndim == 2 else positions[0]
 
     new_cache = paged_update_cache(
-        cache, k, v, write_pos, write_slots, fresh_pages, quant=cfg.kv_quant
+        cache, k, v, write_pos, write_slots, fresh_pages, copy_pages,
+        quant=cfg.kv_quant,
     )
     window = cfg.window if local else 0
     if kv_lens is not None and s == 1 and kernel_ops.PAGED_ATTENTION_FUSED:

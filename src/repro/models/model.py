@@ -178,6 +178,29 @@ class Model:
             return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
         return {str(i): c for i, c in enumerate(caches)}
 
+    def paged_scrub(self, pools: Any, pages: jax.Array) -> Any:
+        """Scrub the position plane of `pages` (device page ids, 0 = null
+        no-op) to the empty sentinel across every layer — the out-of-step
+        form of the fresh-page scrub `paged_update_cache` does inline.
+
+        The scheduler uses it when one admission round recycles more pages
+        than the jitted step's fixed `fresh_pages` width can carry (long-
+        prompt bursts, unaligned chunked-prefill boundaries): overflow rows
+        are scrubbed with dedicated calls *before* the step that writes
+        into them, so a recycled page still never leaks its previous
+        tenant's entries into a gather-read."""
+
+        def one(cache):
+            cache = dict(cache)
+            # ppos is (nb, bs) per layer or (L, nb, bs) stacked; the
+            # ellipsis lands `pages` on the page axis either way
+            cache["ppos"] = cache["ppos"].at[..., pages, :].set(L.CACHE_EMPTY_POS)
+            return cache
+
+        if isinstance(pools, dict) and "ppos" in pools:
+            return one(pools)
+        return {k: one(c) for k, c in pools.items()}
+
     # ------------------------------------------------------------------
     # forward
     # ------------------------------------------------------------------
@@ -197,6 +220,7 @@ class Model:
                     write_pos=paged["write_pos"],
                     fresh_pages=paged.get("fresh_pages"),
                     kv_lens=paged.get("kv_lens"),
+                    copy_pages=paged.get("copy_pages"),
                 )
             else:
                 out, new_cache = L.attention_block(

@@ -44,7 +44,7 @@ _ACT_BYTES = 2  # bf16
 
 @dataclasses.dataclass
 class _Sample:
-    regime: str       # 'prefill' | 'decode'
+    regime: str       # 'prefill' | 'prefill_chunk' | 'decode'
     codec: str        # 'w=<spec>,kv=<quant>' traffic-shape key
     raw_pred_s: float  # unscaled roofline prediction
     measured_s: float
@@ -162,6 +162,39 @@ class RoofLens:
             n_chips=self.n_chips,
         )
 
+    def _raw_prefill_chunk(self, batch_rows: int, span: int,
+                           table_tokens: float) -> float:
+        """Chunked prefill (DESIGN.md §15) is its own regime: unlike
+        monolithic prefill, each chunk's queries attend a prefix *already
+        in the pool* — so on top of the write-side traffic there is a
+        KV gather-read of the length-bounded table (table_tokens ≈ tw * bs
+        per row), and the attention flops see the full written prefix, not
+        span/2. Its time constant also differs from both neighbours (small
+        launches like decode, matmul-shaped like prefill), which is why it
+        calibrates separately."""
+        self._require_bound()
+        tokens = float(batch_rows) * span
+        # queries at the chunk's tail attend everything written so far:
+        # mean context ~ table_tokens - span/2
+        flops = tokens * (
+            self._linear_flops_per_token
+            + self._attn_flops(max(1.0, table_tokens - span / 2.0))
+        )
+        kv_write = len(self._attn_layers) * self._kv_token_bytes()
+        bytes_ = (
+            self.weight_bytes
+            + tokens * (self._act_bytes_per_token() + kv_write)
+            + batch_rows * self._kv_read_bytes(table_tokens)
+        )
+        vops = (
+            (tokens / 512.0 * self._w_vops if self._w_vops else 0.0)
+            + batch_rows * self._kv_vops(table_tokens)
+        )
+        return rs.surface_step_time(
+            self.profile, flops=flops, hbm_bytes=bytes_, vector_ops=vops,
+            n_chips=self.n_chips,
+        )
+
     def _raw_decode(self, kv_lens: Sequence[float], steps: int) -> float:
         """`steps` fixed-shape decode scan steps over `m_slots` rows of
         which `len(kv_lens)` are active with the given context lengths at
@@ -194,6 +227,13 @@ class RoofLens:
             "prefill", 1.0
         )
 
+    def predict_prefill_chunk(self, batch_rows: int, span: int,
+                              table_tokens: float) -> float:
+        """Calibrated predicted wall seconds for one chunked-prefill launch."""
+        return self._raw_prefill_chunk(
+            batch_rows, span, table_tokens
+        ) * self.scale.get("prefill_chunk", 1.0)
+
     def predict_decode(self, kv_lens: Sequence[float], steps: int = 1) -> float:
         """Calibrated predicted wall seconds for one decode chunk."""
         return self._raw_decode(kv_lens, steps) * self.scale.get("decode", 1.0)
@@ -204,6 +244,14 @@ class RoofLens:
                         measured_s: float) -> None:
         self._record("prefill", self._raw_prefill(batch_rows, span),
                      measured_s)
+
+    def observe_prefill_chunk(self, batch_rows: int, span: int,
+                              table_tokens: float, measured_s: float) -> None:
+        self._record(
+            "prefill_chunk",
+            self._raw_prefill_chunk(batch_rows, span, table_tokens),
+            measured_s,
+        )
 
     def observe_decode(self, kv_lens: Sequence[float], steps: int,
                        measured_s: float) -> None:
@@ -239,7 +287,7 @@ class RoofLens:
         """Fit one measured/raw scale per regime (median — robust to the
         first-call compile outlier) and apply it to future predictions.
         Returns the fitted scales; regimes with no samples are untouched."""
-        for regime in ("prefill", "decode"):
+        for regime in ("prefill", "prefill_chunk", "decode"):
             ratios = sorted(
                 s.measured_s / s.raw_pred_s
                 for s in self.samples

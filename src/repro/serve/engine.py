@@ -68,17 +68,27 @@ def make_decode_step(model: Model) -> Callable:
 
 def make_paged_prefill_step(model: Model) -> Callable:
     """paged_prefill(params, tokens (B,Sp), positions, cache, block_tables,
-    write_slots, write_pos, fresh_pages, last_idx (B,)) -> (last-token
-    logits (B,V), cache).
+    write_slots, write_pos, fresh_pages, copies (C,2), last_idx (B,)) ->
+    (last-token logits (B,V), cache).
 
     Batched: every request admitted in a scheduling round prefills in one
     call (the scheduler buckets B to a power of two and Sp to the round's
     max page-rounded length, bounding the jit-shape count). Each row's last
     real token is gathered on device — only the (B, V) logits rows the
-    sampler needs ever leave the forward pass."""
+    sampler needs ever leave the forward pass.
+
+    `copies` carries the round's queued copy-on-write page clones (null-page
+    self-copies pad the fixed shape); the cache update applies them before
+    any scrub or scatter, so a prefix-hit row recomputing its last prompt
+    token writes into its private clone, never into the shared page.
+
+    The same step serves chunked prefill (DESIGN.md §15): the scheduler
+    passes a *length-bounded* block-table width covering only pages the
+    chunk can attend to — the gather-read cost then scales with the prompt
+    prefix written so far instead of the engine-wide max table width."""
 
     def paged_prefill(params, tokens, positions, cache, tables, slots, wpos,
-                      fresh, last_idx):
+                      fresh, copies, last_idx):
         logits, new_cache, _ = model.forward(
             params, tokens=tokens, positions=positions, cache=cache,
             paged={
@@ -86,6 +96,7 @@ def make_paged_prefill_step(model: Model) -> Callable:
                 "write_slots": slots,
                 "write_pos": wpos,
                 "fresh_pages": fresh,
+                "copy_pages": copies,
             },
         )
         last = jnp.take_along_axis(logits, last_idx[:, None, None], axis=1)
@@ -188,6 +199,21 @@ class GenerationEngine:
     reference in tests). `prefill_batch=False` likewise restores one jit
     call per admitted request (the pre-PR4 baseline in benchmarks).
 
+    `prefix_cache=True` (DESIGN.md §15) turns on multi-tenant prefix
+    sharing: a radix index over `block_size`-token prompt chunks maps
+    cached prefixes to refcounted pages, admission pins the longest cached
+    prefix and computes only the tail, and the first divergent write
+    copy-on-writes the shared page. Greedy outputs are bit-identical to the
+    unshared path; the default stays off so the pool drains to empty when
+    idle (the prefix index deliberately retains pages).
+
+    `prefill_chunk` caps how many prompt tokens one prefill call processes
+    per request: longer (non-cached) prompt tails run as fixed-size chunks
+    interleaved with decode rounds, each chunk reading through a
+    length-bounded block table, so a long prompt neither stalls the running
+    batch nor pays the engine-wide max gather width. `None` (default) keeps
+    monolithic prefill.
+
     `obs` installs a `repro.obs.Observability` bundle (DESIGN.md §14):
     request-lifecycle tracing (TTFT/ITL, Chrome trace export), the metrics
     registry, and the RoofLens predicted-vs-measured loop — the engine
@@ -214,6 +240,8 @@ class GenerationEngine:
         kv_quant: Optional[str] = None,
         decode_chunk: int = 8,
         prefill_batch: bool = True,
+        prefix_cache: bool = False,
+        prefill_chunk: Optional[int] = None,
         obs=None,
     ):
         if kv_quant is not None and kv_quant != model.cfg.kv_quant:
@@ -253,7 +281,7 @@ class GenerationEngine:
                 num_blocks = max_slots * self.max_blocks
             self.kv = PagedKVCache(
                 model, num_blocks=num_blocks, block_size=block_size,
-                kv_quant=self.kv_quant,
+                kv_quant=self.kv_quant, prefix_cache=prefix_cache,
             )
             if mesh is not None:
                 ctx = sh.ShardingCtx(mesh, fsdp=fsdp, mode="serve")
@@ -269,6 +297,7 @@ class GenerationEngine:
             self._paged_prefill = jax.jit(make_paged_prefill_step(model))
             self._paged_decode = jax.jit(make_paged_decode_step(model))
             self._paged_decode_chunk = make_paged_decode_chunk_step(model)
+            self._paged_scrub = jax.jit(model.paged_scrub)
             # window-aware page freeing is sound only when *every* layer's
             # attention is local: one global layer keeps the full history
             # live (the pool is shared across layers)
@@ -283,6 +312,8 @@ class GenerationEngine:
                 decode_chunk_fn=self._run_paged_decode_chunk,
                 chunk=max(1, decode_chunk),
                 prefill_batch=prefill_batch,
+                prefill_chunk=prefill_chunk,
+                scrub_fn=self._run_paged_scrub,
                 local_window=(
                     self.cfg.window if all_local and self.cfg.window > 0 else None
                 ),
@@ -352,7 +383,7 @@ class GenerationEngine:
         return pos2d
 
     def _run_paged_prefill(
-        self, tokens, positions, tables, slots, wpos, fresh, last_idx
+        self, tokens, positions, tables, slots, wpos, fresh, copies, last_idx
     ):
         with self._mesh_scope():
             logits, self.kv.pools = self._paged_prefill(
@@ -364,9 +395,18 @@ class GenerationEngine:
                 jnp.asarray(slots),
                 jnp.asarray(wpos),
                 jnp.asarray(fresh),
+                jnp.asarray(copies),
                 jnp.asarray(last_idx),
             )
         return logits
+
+    def _run_paged_scrub(self, pages):
+        """Out-of-step scrub for fresh-page overflow rows (see
+        `Model.paged_scrub`): one fixed-shape jitted call per extra row."""
+        with self._mesh_scope():
+            self.kv.pools = self._paged_scrub(
+                self.kv.pools, jnp.asarray(pages, jnp.int32)
+            )
 
     def _run_paged_decode(
         self, tokens, positions, tables, slots, wpos, fresh, kv_lens

@@ -1,5 +1,6 @@
-"""Block-paged KV cache: host-side free-list allocator + per-request block
-tables over the device pools built by `Model.init_paged_cache`.
+"""Block-paged KV cache: host-side refcounted free-list allocator, radix
+prefix index, and per-request block tables over the device pools built by
+`Model.init_paged_cache`.
 
 Layout (DESIGN.md §10): per attention layer one `(num_blocks+1, block_size,
 Hkv, Dh)` pool for K and V plus a `(num_blocks+1, block_size)` position
@@ -9,21 +10,34 @@ exactly-zero attention weight. Allocator page `a` maps to device page
 `a + 1`.
 
 Split of responsibilities:
-  BlockAllocator  pure free-list over allocatable page ids (hypothesis-tested
-                  invariant: free + allocated always sums to the pool size)
-  PagedKVCache    block tables + lazy page allocation + admission-reservation
-                  accounting + the flat write-slot / block-table arrays the
+  BlockAllocator  refcounted free-list over allocatable page ids
+                  (hypothesis-tested invariant: free + uniquely-allocated
+                  always sums to the pool size; a page returns to the free
+                  list only when its last holder drops it)
+  PrefixIndex     radix/trie over `block_size`-token prompt chunks mapping
+                  shared prompt prefixes to physical page ids (DESIGN.md
+                  §15). The index holds its own reference on every cached
+                  page; LRU leaf eviction reclaims index-only pages when
+                  admission needs headroom.
+  PagedKVCache    block tables + lazy page allocation + admission-
+                  reservation accounting + copy-on-write + the flat
+                  write-slot / block-table / fresh-page / copy arrays the
                   jitted steps consume; owns the device pool pytree
 
 A request at length `len` holds exactly `ceil(len / block_size)` pages —
-never `max_len` — which is the whole point vs the fixed-slot ring cache.
-Admission reserves the request's worst-case page count up front (scheduler
-policy), so lazy per-step allocation can never deadlock mid-flight.
+never `max_len` — and with the prefix index on, pages holding a prompt
+prefix another tenant already computed are *shared* (reference-counted),
+so repeated system prompts cost pool capacity once. Admission reserves the
+request's worst-case page count for the non-shared tail up front (plus one
+page when a copy-on-write clone of the last shared page is inevitable), so
+lazy per-step allocation can never deadlock mid-flight, and the
+reservation count is exact: every lazy allocation decrements it by one and
+an allocation past the reservation is an accounting bug that raises.
 """
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 import jax
@@ -31,14 +45,20 @@ import jax.numpy as jnp
 
 
 class BlockAllocator:
-    """LIFO free-list over `num_blocks` page ids [0, num_blocks)."""
+    """Refcounted LIFO free-list over `num_blocks` page ids [0, num_blocks).
+
+    `alloc()` hands out a page at refcount 1; `incref` adds a holder (a
+    second request sharing a prefix page, or the prefix index pinning it);
+    `free` drops one holder per listed page and returns only the pages
+    whose count hit zero to the free list. Dropping a page that has no
+    holders is a double-free and raises."""
 
     def __init__(self, num_blocks: int):
         if num_blocks <= 0:
             raise ValueError(f"need at least one block, got {num_blocks}")
         self.num_blocks = num_blocks
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
-        self._allocated: set = set()
+        self._refs: Dict[int, int] = {}
 
     @property
     def free_count(self) -> int:
@@ -46,21 +66,173 @@ class BlockAllocator:
 
     @property
     def used_count(self) -> int:
-        return len(self._allocated)
+        """Unique pages allocated — shared pages count once."""
+        return len(self._refs)
+
+    @property
+    def shared_count(self) -> int:
+        """Pages currently held by more than one holder."""
+        return sum(1 for c in self._refs.values() if c > 1)
+
+    def ref_count(self, block: int) -> int:
+        return self._refs.get(block, 0)
 
     def alloc(self) -> int:
         if not self._free:
             raise RuntimeError("KV pool exhausted (admission should prevent this)")
         b = self._free.pop()
-        self._allocated.add(b)
+        self._refs[b] = 1
         return b
 
-    def free(self, blocks) -> None:
+    def incref(self, block: int) -> None:
+        if block not in self._refs:
+            raise ValueError(f"incref on unallocated block {block}")
+        self._refs[block] += 1
+
+    def free(self, blocks) -> List[int]:
+        """Drop one reference per listed page; returns the pages whose
+        count hit zero (now back on the free list)."""
+        freed: List[int] = []
         for b in blocks:
-            if b not in self._allocated:
+            c = self._refs.get(b)
+            if c is None:
                 raise ValueError(f"double-free / foreign block {b}")
-            self._allocated.discard(b)
-            self._free.append(b)
+            if c > 1:
+                self._refs[b] = c - 1
+            else:
+                del self._refs[b]
+                self._free.append(b)
+                freed.append(b)
+        return freed
+
+
+class _RadixNode:
+    __slots__ = ("chunk", "page", "children", "parent", "tick")
+
+    def __init__(self, chunk: bytes, page: Optional[int],
+                 parent: Optional["_RadixNode"], tick: int):
+        self.chunk = chunk
+        self.page = page
+        self.children: Dict[bytes, "_RadixNode"] = {}
+        self.parent = parent
+        self.tick = tick
+
+
+class PrefixIndex:
+    """Radix/trie prefix index keyed on `block_size`-token prompt chunks.
+
+    Each node maps one full page of prompt token ids to the physical page
+    holding that page's KV; a root-to-node path is a cached prompt prefix.
+    The index increfs every page it caches, so request eviction never
+    drops a cached prefix — pages leave the index (and, at refcount zero,
+    return to the pool) only through `evict`, oldest-touched leaves first,
+    and only while no live request shares them."""
+
+    def __init__(self, block_size: int, allocator: BlockAllocator):
+        self.block_size = block_size
+        self.allocator = allocator
+        self._root = _RadixNode(b"", None, None, 0)
+        self._pages = 0
+        self._tick = 0
+
+    def _chunks(self, prompt) -> Iterator[bytes]:
+        p = np.asarray(prompt, np.int32).reshape(-1)
+        bs = self.block_size
+        for i in range(len(p) // bs):
+            yield p[i * bs:(i + 1) * bs].tobytes()
+
+    @property
+    def pages(self) -> int:
+        """Pages the index currently pins (one reference each)."""
+        return self._pages
+
+    def lookup(self, prompt) -> List[int]:
+        """Longest cached full-page prefix of `prompt` -> its page ids, in
+        position order. Touches the matched chain's LRU ticks."""
+        self._tick += 1
+        node, pages = self._root, []
+        for key in self._chunks(prompt):
+            child = node.children.get(key)
+            if child is None:
+                break
+            child.tick = self._tick
+            pages.append(child.page)
+            node = child
+        return pages
+
+    def insert(self, prompt, table: List[Optional[int]]) -> int:
+        """Cache every full page of a finished prefill: chunks already
+        indexed are kept (first writer wins — the later request's identical
+        page stays private), new chunks pin the request's page with one
+        index reference. Stops at a window-freed hole (a cached prefix must
+        be contiguous from position 0). Returns pages newly cached."""
+        self._tick += 1
+        node, added = self._root, 0
+        for i, key in enumerate(self._chunks(prompt)):
+            child = node.children.get(key)
+            if child is None:
+                if i >= len(table) or table[i] is None:
+                    break
+                child = _RadixNode(key, table[i], node, self._tick)
+                node.children[key] = child
+                self.allocator.incref(table[i])
+                self._pages += 1
+                added += 1
+            else:
+                child.tick = self._tick
+            node = child
+        return added
+
+    def evictable_count(self) -> int:
+        """Pages reclaimable right now: nodes whose whole subtree is held
+        by the index alone (refcount 1) — those evict leaf-first without
+        breaking any cached chain a live request still shares."""
+        def walk(n: _RadixNode) -> Tuple[int, bool]:
+            total, all_free = 0, True
+            for c in n.children.values():
+                t, a = walk(c)
+                total += t
+                all_free = all_free and a
+            if n.page is None:  # root
+                return total, all_free
+            if all_free and self.allocator.ref_count(n.page) == 1:
+                return total + 1, True
+            return total, False
+
+        return walk(self._root)[0]
+
+    def evict(self, n_pages: int) -> int:
+        """Reclaim up to `n_pages` index-only pages, LRU leaves first
+        (evicting a leaf may expose its parent as the next candidate).
+        Returns pages actually returned to the free list."""
+        freed = 0
+        while freed < n_pages:
+            leaves = [
+                n for n in self._leaves()
+                if self.allocator.ref_count(n.page) == 1
+            ]
+            if not leaves:
+                break
+            leaves.sort(key=lambda n: n.tick)
+            for node in leaves:
+                if freed >= n_pages:
+                    break
+                if node.children:
+                    continue  # a sibling eviction pass may have re-parented
+                del node.parent.children[node.chunk]
+                self._pages -= 1
+                freed += len(self.allocator.free([node.page]))
+        return freed
+
+    def _leaves(self) -> List[_RadixNode]:
+        out, stack = [], [self._root]
+        while stack:
+            n = stack.pop()
+            if n.children:
+                stack.extend(n.children.values())
+            elif n.page is not None:
+                out.append(n)
+        return out
 
 
 class PagedKVCache:
@@ -74,6 +246,7 @@ class PagedKVCache:
         block_size: int,
         dtype=jnp.bfloat16,
         kv_quant: Optional[str] = None,
+        prefix_cache: bool = False,
     ):
         self.block_size = block_size
         self.num_blocks = num_blocks
@@ -82,9 +255,16 @@ class PagedKVCache:
         self.pools = model.init_paged_cache(
             num_blocks, block_size, dtype, kv_quant=self.kv_quant
         )
-        self._tables: Dict[int, List[int]] = {}
+        self.prefix: Optional[PrefixIndex] = (
+            PrefixIndex(block_size, self.allocator) if prefix_cache else None
+        )
+        self._tables: Dict[int, List[Optional[int]]] = {}
         self._reserved: Dict[int, int] = {}
         self._fresh: List[int] = []  # device pages allocated since last drain
+        self._pending_copies: List[Tuple[int, int]] = []  # (src, dst) device ids
+        # lifetime counters (Scheduler.stats() reports them)
+        self.prefix_hit_tokens = 0
+        self.cow_copies = 0
 
     # -- admission accounting ------------------------------------------------
 
@@ -112,11 +292,13 @@ class PagedKVCache:
 
     def occupancy(self) -> Dict[str, int]:
         """Defensive point-in-time snapshot of pool occupancy (all in
-        pages): used = allocated to live requests, free = on the free list,
-        reserved = promised to admitted requests but not yet lazily
-        allocated, admittable = free minus reserved (the admission-control
-        headroom `can_admit` checks against). The scheduler publishes these
-        as `serve.pool.*` gauges when a metrics registry is installed."""
+        pages): used = unique pages allocated to live requests and the
+        prefix index, free = on the free list, reserved = promised to
+        admitted requests but not yet lazily allocated, admittable = free
+        minus reserved (the admission-control headroom `can_admit` checks
+        against), shared = pages with more than one holder, cached = pages
+        the prefix index pins. The scheduler publishes these as
+        `serve.pool.*` gauges when a metrics registry is installed."""
         used = self.allocator.used_count
         free = self.allocator.free_count
         reserved = self.reserved_blocks
@@ -125,25 +307,86 @@ class PagedKVCache:
             "free": free,
             "reserved": reserved,
             "admittable": free - reserved,
+            "shared": self.allocator.shared_count,
+            "cached": self.prefix.pages if self.prefix is not None else 0,
             "total": self.num_blocks,
             "tables": len(self._tables),
         }
 
-    def can_admit(self, kv_len: int) -> bool:
-        return self.free_blocks - self.reserved_blocks >= self.blocks_for(kv_len)
+    def _plan(self, kv_len: int, prompt) -> Tuple[List[int], int, int]:
+        """Admission plan: (prefix-hit pages, hit tokens, pages to reserve).
 
-    def admit(self, rid: int, kv_len: int) -> None:
-        if not self.can_admit(kv_len):
-            raise RuntimeError(f"admitting request {rid} would oversubscribe the pool")
+        The hit is capped at `prompt_len - 1` tokens — the last prompt
+        token is always recomputed (its logits seed sampling), and when the
+        cached pages cover the whole prompt that recompute's KV write lands
+        in a shared page, so the plan reserves one extra page for the
+        inevitable copy-on-write clone."""
+        hit_pages: List[int] = []
+        hit_tokens = 0
+        clone = 0
+        if self.prefix is not None and prompt is not None and len(prompt) > 1:
+            hit_pages = self.prefix.lookup(prompt)
+            hit_tokens = min(len(hit_pages) * self.block_size, len(prompt) - 1)
+            clone = int(
+                bool(hit_pages)
+                and len(hit_pages) * self.block_size >= len(prompt)
+            )
+        need = self.blocks_for(kv_len) - len(hit_pages) + clone
+        return hit_pages, hit_tokens, need
+
+    def can_admit(self, kv_len: int, prompt=None) -> bool:
+        hit_pages, _, need = self._plan(kv_len, prompt)
+        headroom = self.free_blocks - self.reserved_blocks
+        if self.prefix is not None:
+            # index-only pages are reclaimable headroom — minus the hit
+            # pages themselves, which admission would pin, not evict
+            hit_idx_only = sum(
+                1 for p in hit_pages if self.allocator.ref_count(p) == 1
+            )
+            headroom += self.prefix.evictable_count() - hit_idx_only
+        return headroom >= need
+
+    def admit(self, rid: int, kv_len: int, prompt=None) -> int:
+        """Admit a request: pin its longest cached prompt prefix (if a
+        prefix index is installed and `prompt` is given) and reserve pages
+        for the rest of its worst case. Returns the prefix-hit token count
+        — prompt tokens whose KV the request shares instead of computing."""
         if rid in self._tables:
             raise ValueError(f"request {rid} already admitted")
-        self._tables[rid] = []
-        self._reserved[rid] = self.blocks_for(kv_len)
+        hit_pages, hit_tokens, need = self._plan(kv_len, prompt)
+        for p in hit_pages:
+            self.allocator.incref(p)
+        headroom = self.free_blocks - self.reserved_blocks
+        if need > headroom and self.prefix is not None:
+            headroom += self.prefix.evict(need - headroom)
+        if need > headroom:
+            self.allocator.free(hit_pages)  # roll back the prefix pins
+            raise RuntimeError(
+                f"admitting request {rid} would oversubscribe the pool"
+            )
+        self._tables[rid] = list(hit_pages)
+        self._reserved[rid] = need
+        self.prefix_hit_tokens += hit_tokens
+        return hit_tokens
 
     def release(self, rid: int) -> None:
-        table = self._tables.pop(rid)
+        """Idempotent teardown: drop the request's reference on every page
+        it still holds (shared pages survive for their other holders) and
+        clear its reservation. Releasing an unknown / already-released rid
+        is a no-op — the scheduler can legitimately reach eviction twice
+        for one request (EOS at prefill + length cap in the same round)."""
+        table = self._tables.pop(rid, None)
+        if table is None:
+            return
         self.allocator.free([p for p in table if p is not None])
         self._reserved.pop(rid, None)
+
+    def prefix_insert(self, rid: int, prompt) -> int:
+        """Index every full prompt page of a finished prefill so later
+        requests can share it. No-op without a prefix index."""
+        if self.prefix is None:
+            return 0
+        return self.prefix.insert(prompt, self._tables[rid])
 
     def blocks_held(self, rid: int) -> int:
         return sum(1 for p in self._tables[rid] if p is not None)
@@ -156,7 +399,9 @@ class PagedKVCache:
         block indices stay position-addressed; `block_table_row` turns the
         placeholder into a null-page read, which the scrubbed sentinel
         masks (reads must *not* target the stale physical page — it may
-        already belong to another tenant). Returns the pages freed."""
+        already belong to another tenant). Returns the pages actually
+        returned to the free list (a shared page only drops this request's
+        reference)."""
         table = self._tables[rid]
         bs = self.block_size
         dead = []
@@ -165,44 +410,111 @@ class PagedKVCache:
                 dead.append(table[bi])
                 table[bi] = None
         if dead:
-            self.allocator.free(dead)
-        return len(dead)
+            return len(self.allocator.free(dead))
+        return 0
 
     # -- slot / table arrays for the jitted steps ----------------------------
 
+    def _alloc_page(self, rid: int, *, fresh: bool) -> int:
+        """One lazy page against the request's reservation — exact
+        accounting: each allocation consumes exactly one reserved page, and
+        running past the reservation is a bookkeeping bug, not a clamp."""
+        left = self._reserved.get(rid, 0)
+        if left <= 0:
+            raise RuntimeError(
+                f"request {rid}: page allocation exceeds its admission "
+                "reservation (accounting bug)"
+            )
+        b = self.allocator.alloc()
+        self._reserved[rid] = left - 1
+        if fresh:
+            self._fresh.append(b + 1)
+        return b
+
     def write_slots(self, rid: int, start_pos: int, n: int) -> np.ndarray:
         """Flat device slot ids for positions [start_pos, start_pos + n),
-        allocating pages lazily as positions cross page boundaries."""
+        allocating pages lazily as positions cross page boundaries.
+
+        Copy-on-write: the first write that targets a page with other
+        holders (a prefix-shared page) clones it — a fresh page is
+        allocated, a (src, dst) device copy is queued for the next jitted
+        step (`drain_copies`), the table entry is swapped to the clone, and
+        this request's reference on the shared original is dropped. Sibling
+        requests and the prefix index keep reading the untouched original.
+        Clone pages are *not* fresh pages: the device copy fully
+        initializes them, scrubbing would erase the copied prefix."""
         table = self._tables[rid]
         bs = self.block_size
         out = np.empty(n, np.int32)
         for i, p in enumerate(range(start_pos, start_pos + n)):
             bi = p // bs
             while len(table) <= bi:
-                table.append(self.allocator.alloc())
-                self._fresh.append(table[-1] + 1)
-                self._reserved[rid] = max(0, self._reserved[rid] - 1)
-            if table[bi] is None:
+                table.append(self._alloc_page(rid, fresh=True))
+            pg = table[bi]
+            if pg is None:
                 # positions only grow and free_behind only releases pages
                 # behind the window — a write can never land on one
                 raise ValueError(
                     f"request {rid}: write at position {p} targets a "
                     "window-freed page"
                 )
-            out[i] = (table[bi] + 1) * bs + p % bs
+            if self.allocator.ref_count(pg) > 1:
+                dst = self._alloc_page(rid, fresh=False)
+                self._pending_copies.append((pg + 1, dst + 1))
+                self.allocator.free([pg])  # >1 holders: never hits the free list
+                table[bi] = pg = dst
+                self.cow_copies += 1
+            out[i] = (pg + 1) * bs + p % bs
         return out
 
-    def drain_fresh(self, pad_to: int) -> np.ndarray:
-        """Device pages allocated since the last drain, null-page-padded to a
-        fixed length. The jitted step scrubs these pages' position plane
-        before writing, so a page recycled from an evicted request never
-        leaks its old tenant's entries (pages are not zeroed on free)."""
+    @property
+    def pending_copies(self) -> int:
+        return len(self._pending_copies)
+
+    def drain_copies(self, pad_to: int) -> np.ndarray:
+        """Queued copy-on-write clones as a `(pad_to, 2)` (src, dst) device
+        page array for the next jitted step, which applies them to every
+        pool plane *before* the fresh scrub and the scatter. Padding rows
+        are (0, 0) — a null-page self-copy, the identity."""
+        copies, self._pending_copies = self._pending_copies, []
+        if len(copies) > pad_to:
+            raise ValueError(f"{len(copies)} CoW copies > pad_to={pad_to}")
+        out = np.zeros((pad_to, 2), np.int32)
+        if copies:
+            out[: len(copies)] = copies
+        return out
+
+    def drain_fresh_rows(self, pad_to: int) -> List[np.ndarray]:
+        """Device pages allocated since the last drain, as one or more
+        fixed-length null-page-padded rows. The first row rides the jitted
+        step (scrubbed in-step before its scatter); when one admission
+        round allocates more fresh pages than `pad_to` (long-prompt burst,
+        unaligned chunked-prefill boundaries) the overflow comes back as
+        extra rows for the scheduler's dedicated scrub calls instead of a
+        mid-admission hard failure with pages already allocated."""
+        if pad_to < 1:
+            raise ValueError(f"pad_to must be >= 1, got {pad_to}")
         fresh, self._fresh = self._fresh, []
-        if len(fresh) > pad_to:
-            raise ValueError(f"{len(fresh)} fresh pages > pad_to={pad_to}")
-        row = np.zeros(pad_to, np.int32)
-        row[: len(fresh)] = fresh
-        return row
+        rows = []
+        for i in range(0, len(fresh), pad_to):
+            chunk = fresh[i:i + pad_to]
+            row = np.zeros(pad_to, np.int32)
+            row[: len(chunk)] = chunk
+            rows.append(row)
+        if not rows:
+            rows.append(np.zeros(pad_to, np.int32))
+        return rows
+
+    def drain_fresh(self, pad_to: int) -> np.ndarray:
+        """Single-row `drain_fresh_rows` (jitted steps scrub these pages'
+        position planes before writing, so a recycled page never leaks its
+        old tenant's entries). Callers that can see an overflow must use
+        `drain_fresh_rows` + dedicated scrub batches instead."""
+        rows = self.drain_fresh_rows(pad_to)
+        if len(rows) > 1:
+            n = sum(int((r != 0).sum()) for r in rows)
+            raise ValueError(f"{n} fresh pages > pad_to={pad_to}")
+        return rows[0]
 
     def null_slots(self, offsets) -> np.ndarray:
         """Null-page slots for pad tokens (distinct within one page span)."""

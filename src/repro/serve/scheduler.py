@@ -23,6 +23,14 @@ Sampling is per-request: `sample_fn(logits, rids, steps)` keys on
 can never change a request's sampled tokens. Inactive / padding rows carry
 rid -1 (an unreachable uint32 sentinel), so their junk draws can never
 collide with a real request's key stream.
+
+With a prefix-cached pool (DESIGN.md §15) admission first pins the longest
+cached prefix of the prompt, so prefill starts at `Request.prefilled`
+instead of 0; with `prefill_chunk` set, the remaining prompt tail runs as
+fixed-size chunks interleaved with decode rounds — each chunk reads
+through a length-bounded block table (the PR 5 idea applied to prefill),
+and a slot joins decode only once its final chunk has sampled the first
+output token.
 """
 from __future__ import annotations
 
@@ -55,9 +63,15 @@ STAT_UNITS: Dict[str, str] = {
     "paged_block_steps": "pages*steps (pool pages held, summed per step)",
     "dense_block_steps": "pages*steps (what a max_len ring cache would hold)",
     "peak_blocks": "pages (max pool pages held at any step)",
-    "prefill_calls": "calls (bucketed prefill launches)",
+    "prefill_calls": "calls (bucketed prefill launches, incl. chunked)",
+    "prefill_chunk_calls": "calls (length-bounded chunked-prefill launches)",
     "prefill_token_steps": "tokens (padded token-steps launched in prefill)",
     "prefill_real_tokens": "tokens (real prompt tokens prefilled)",
+    "prefix_hit_tokens": "tokens (prompt tokens served from the prefix "
+                         "cache instead of recomputed)",
+    "cow_copies": "pages (copy-on-write clones of prefix-shared pages)",
+    "shared_pages": "pages (pages currently held by >1 holder)",
+    "prefix_cached_pages": "pages (pages the prefix index currently pins)",
     "kv_pages_read": "pages (decode-attention pages actually walked)",
     "kv_pages_read_worst": "pages (max_blocks gather worst case)",
     "window_freed_pages": "pages (released behind the attention window)",
@@ -79,6 +93,11 @@ class Request:
     eos_id: Optional[int] = None
     out: List[int] = dataclasses.field(default_factory=list)
     peak_blocks: int = 0
+    # prompt tokens whose KV is already in the pool: the prefix-cache hit
+    # at admission, then each prefill chunk advances it; prefill is done
+    # (and the slot decode-ready, signalled by a non-empty `out`) once it
+    # reaches len(prompt)
+    prefilled: int = 0
 
     @property
     def next_pos(self) -> int:
@@ -88,9 +107,11 @@ class Request:
 class Scheduler:
     """Request queue + admission/eviction around jitted prefill/decode fns.
 
-    prefill_fn(tokens (B,Sp), positions (B,Sp), block_tables (B,MB),
+    prefill_fn(tokens (B,Sp), positions (B,Sp), block_tables (B,TW),
                write_slots (B,Sp), write_pos (B,Sp), fresh (F,),
-               last_idx (B,)) -> last-token logits (B, V) on device
+               copies (B,2), last_idx (B,)) -> last-token logits (B, V)
+               on device; TW is max_blocks for monolithic prefill and a
+               length-bounded pow2 page count for chunked prefill
     decode_fn(tokens (M,1), positions (M,1), block_tables (M,MB),
               write_slots (M,1), write_pos (M,1), fresh (M,),
               kv_lens (M,)) -> logits (M, V)
@@ -115,6 +136,16 @@ class Scheduler:
     pages that have slid entirely behind every live and future query's
     attention window go back to the free list; their table entries become
     null-page reads, which the position sentinel masks to zero weight.
+
+    `prefill_chunk` switches prefill to chunked mode: each scheduling
+    round advances every mid-prefill slot by at most that many prompt
+    tokens in one length-bounded launch, then runs a normal decode round
+    for the slots that already sampled their first token — a long prompt
+    admits immediately and interleaves with decode instead of stalling it.
+    `scrub_fn(pages)` is the engine's out-of-step fresh-page scrub, used
+    when one round recycles more pages than the launch's fixed
+    fresh-vector width (satellite of the same fix: `drain_fresh` used to
+    hard-fail mid-admission with pages already allocated).
     """
 
     def __init__(
@@ -130,6 +161,8 @@ class Scheduler:
         chunk: int = 1,
         prefill_batch: bool = True,
         local_window: Optional[int] = None,
+        prefill_chunk: Optional[int] = None,
+        scrub_fn: Optional[Callable] = None,
         obs=None,
     ):
         if chunk < 1:
@@ -138,6 +171,8 @@ class Scheduler:
             raise ValueError("chunk > 1 requires a decode_chunk_fn")
         if local_window is not None and local_window < 1:
             raise ValueError(f"local_window must be >= 1, got {local_window}")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.cache = cache
         self.max_slots = max_slots
         self.max_len = max_len
@@ -149,6 +184,8 @@ class Scheduler:
         self.chunk = chunk
         self.prefill_batch = prefill_batch
         self.local_window = local_window
+        self.prefill_chunk = prefill_chunk
+        self._scrub = scrub_fn
         self.queue: collections.deque = collections.deque()
         self.slots: List[Optional[Request]] = [None] * max_slots
         self.results: Dict[int, np.ndarray] = {}
@@ -159,8 +196,8 @@ class Scheduler:
             "decode_steps": 0, "decode_chunks": 0, "host_syncs": 0,
             "active_slot_steps": 0,
             "paged_block_steps": 0, "dense_block_steps": 0, "peak_blocks": 0,
-            "prefill_calls": 0, "prefill_token_steps": 0,
-            "prefill_real_tokens": 0,
+            "prefill_calls": 0, "prefill_chunk_calls": 0,
+            "prefill_token_steps": 0, "prefill_real_tokens": 0,
             "kv_pages_read": 0, "kv_pages_read_worst": 0, "window_freed_pages": 0,
         }
         # observability (DESIGN.md §14): every site below is guarded on the
@@ -225,6 +262,8 @@ class Scheduler:
     # ------------------------------------------------------------------
     def step(self) -> None:
         self._admit()
+        if self.prefill_chunk is not None:
+            self._prefill_pending()
         self._decode_active()
 
     def _kv_len(self, r: Request) -> int:
@@ -237,10 +276,12 @@ class Scheduler:
             if self.slots[slot] is not None or not self.queue:
                 continue
             r = self.queue[0]
-            if not self.cache.can_admit(self._kv_len(r)):
+            if not self.cache.can_admit(self._kv_len(r), r.prompt):
                 break  # FIFO: don't let short requests starve the head
             self.queue.popleft()
-            self.cache.admit(r.rid, self._kv_len(r))
+            r.prefilled = self.cache.admit(
+                r.rid, self._kv_len(r), prompt=r.prompt
+            )
             self.slots[slot] = r
             admitted.append((slot, r))
         if self._obs_tracer is not None and admitted:
@@ -255,42 +296,92 @@ class Scheduler:
                 "serve.requests.admitted", unit="requests"
             ).inc(len(admitted))
             self._publish_gauges()
-        if admitted:
+        if admitted and self.prefill_chunk is None:
+            # monolithic prefill: the whole (non-cached) prompt tail in one
+            # launch; chunked mode defers to _prefill_pending instead
+            rows = [
+                (slot, r, r.prefilled, len(r.prompt) - r.prefilled)
+                for slot, r in admitted
+            ]
             if self.prefill_batch:
-                self._prefill_batch(admitted)
+                self._prefill_rows(rows)
             else:
                 # legacy pre-PR4 behavior (kept as the benchmark baseline):
                 # one jit call per admitted request, exact page rounding
-                for one in admitted:
-                    self._prefill_batch([one], bucketed=False)
+                for one in rows:
+                    self._prefill_rows([one], bucketed=False)
             for slot, r in admitted:
                 if self._finished(r):
                     self._evict(slot)
             self._free_window_pages()  # long prompts may already out-span it
 
-    def _prefill_batch(self, admitted: List[tuple], bucketed: bool = True) -> None:
-        """One bucketed-shape prefill for every request admitted this round.
+    def _prefill_pending(self) -> None:
+        """Chunked prefill (DESIGN.md §15): advance every mid-prefill slot
+        by at most `prefill_chunk` prompt tokens in one length-bounded
+        launch. A slot whose final chunk completes samples its first output
+        token and joins the next decode round; until then the decode loop
+        skips it (empty `out`)."""
+        pending = [
+            (i, r) for i, r in enumerate(self.slots)
+            if r is not None and r.prefilled < len(r.prompt)
+        ]
+        if not pending:
+            return
+        rows = [
+            (i, r, r.prefilled,
+             min(self.prefill_chunk, len(r.prompt) - r.prefilled))
+            for i, r in pending
+        ]
+        self._prefill_rows(rows, bounded=True)
+        for i, r in pending:
+            if r.out and self._finished(r):
+                self._evict(i)
+        self._free_window_pages()
 
-        Batch is padded to a power of two (<= max_slots) and the prompt
-        span to the round's max page-rounded length (<= max_blocks page
-        shapes, as before), so the jit-shape count stays
-        O(log(max_slots) * max_blocks) instead of one compile per (batch,
-        length) pair. Padding rows write to the null page under the
-        empty-position sentinel and sample with rid -1."""
+    def _prefill_rows(
+        self, rows: List[tuple], bucketed: bool = True, bounded: bool = False
+    ) -> None:
+        """One bucketed-shape prefill launch over `rows` of
+        (slot, request, start, n): each row writes prompt tokens
+        [start, start + n) at their true positions. Monolithic admission
+        passes start = the prefix-cache hit and n = the whole remaining
+        tail; chunked mode passes fixed-size chunks.
+
+        Batch is padded to a power of two (<= max_slots) and the token
+        span to the round's max page-rounded chunk length, so the jit-shape
+        count stays O(log(max_slots) * max_blocks) instead of one compile
+        per (batch, length) pair. Padding rows write to the null page under
+        the empty-position sentinel and sample with rid -1.
+
+        `bounded=True` (chunked prefill) also shrinks the block-table width
+        to the pow2-rounded page count the round's furthest row can attend
+        to — the gather-read then scales with written prefix, not
+        max_blocks (the PR 5 length-bounding, applied to prefill).
+
+        Only rows whose chunk reaches the end of the prompt sample a token
+        (the first output); the others' logits rows are discarded. Finished
+        prompts are inserted into the prefix index here, while their full
+        pages are still position-contiguous."""
         bs = self.cache.block_size
-        n = len(admitted)
-        max_pages = max(
-            math.ceil(len(r.prompt) / bs) for _, r in admitted
-        )
+        nrows = len(rows)
+        pages = max(math.ceil(n / bs) for _, _, _, n in rows)
         if bucketed:
-            # batch rides power-of-two buckets; the prompt span stays at the
-            # exact page count (<= max_blocks shapes, same as the per-request
+            # batch rides power-of-two buckets; the span stays at the exact
+            # page count (<= max_blocks shapes, same as the per-request
             # path) — padding rows are cheap, padded columns are not
-            b = min(_pow2ceil(n), self.max_slots)
+            b = min(_pow2ceil(nrows), self.max_slots)
         else:
-            b = n
-        pages = max_pages
+            b = nrows
         sp = pages * bs
+        if bounded:
+            tw = min(
+                _pow2ceil(max(
+                    math.ceil((start + n) / bs) for _, _, start, n in rows
+                )),
+                self.max_blocks,
+            )
+        else:
+            tw = self.max_blocks
 
         tokens = np.zeros((b, sp), np.int32)
         positions = np.broadcast_to(
@@ -300,45 +391,73 @@ class Scheduler:
         write_slots = np.broadcast_to(
             self.cache.null_slots(np.arange(sp)), (b, sp)
         ).copy()
-        tables = np.zeros((b, self.max_blocks), np.int32)
+        tables = np.zeros((b, tw), np.int32)
         last_idx = np.zeros(b, np.int32)
         rids = np.full(b, -1, np.int64)
-        for row, (_, r) in enumerate(admitted):
-            p = len(r.prompt)
-            tokens[row, :p] = r.prompt
-            write_pos[row, :p] = np.arange(p, dtype=np.int32)
-            write_slots[row, :p] = self.cache.write_slots(r.rid, 0, p)
-            tables[row] = self.cache.block_table_row(r.rid, self.max_blocks)
-            last_idx[row] = p - 1
-            rids[row] = r.rid
-        fresh = self.cache.drain_fresh(b * pages)
+        completing: List[tuple] = []  # (row, slot, r) sampling their 1st token
+        for row, (slot, r, start, n) in enumerate(rows):
+            tokens[row, :n] = r.prompt[start:start + n]
+            positions[row] = start + positions[row]
+            write_pos[row, :n] = np.arange(start, start + n, dtype=np.int32)
+            write_slots[row, :n] = self.cache.write_slots(r.rid, start, n)
+            tables[row] = self.cache.block_table_row(r.rid, tw)
+            r.prefilled = start + n
+            if r.prefilled >= len(r.prompt):
+                last_idx[row] = n - 1
+                rids[row] = r.rid
+                completing.append((row, slot, r))
+        copies = self.cache.drain_copies(b)
+        fresh_rows = self.cache.drain_fresh_rows(b * pages)
+        for extra in fresh_rows[1:]:
+            # more recycled pages than the launch's fresh vector carries
+            # (long-prompt burst / unaligned chunk boundaries): scrub the
+            # overflow in dedicated fixed-shape calls *before* the launch
+            # that writes into those pages
+            if self._scrub is None:
+                raise ValueError(
+                    f"{sum(int((fr != 0).sum()) for fr in fresh_rows)} fresh "
+                    f"pages > pad_to={b * pages} and no scrub_fn installed"
+                )
+            self._scrub(extra)
         observing = (
             self._obs_tracer is not None or self._obs_rooflens is not None
             or self._obs_metrics is not None
         )
         t0 = self._obs_clock() if observing else 0.0
         logits = self._prefill(
-            tokens, positions, tables, write_slots, write_pos, fresh, last_idx
+            tokens, positions, tables, write_slots, write_pos, fresh_rows[0],
+            copies, last_idx,
         )
         toks = self._sample(logits, rids, np.zeros(b, np.int64))
         # `toks` is host-side: the sample call above was the device->host
         # sync, so t1 - t0 is the full prefill wall time incl. sampling
         t1 = self._obs_clock() if observing else 0.0
-        for row, (_, r) in enumerate(admitted):
+        for row, slot, r in completing:
             r.out.append(int(toks[row]))
+            self.cache.prefix_insert(r.rid, r.prompt)
+        for row, (slot, r, start, n) in enumerate(rows):
             r.peak_blocks = max(r.peak_blocks, self.cache.blocks_held(r.rid))
 
         st = self._stats
         st["prefill_calls"] += 1
         st["host_syncs"] += 1
+        if bounded:
+            st["prefill_chunk_calls"] += 1
         st["prefill_token_steps"] += b * sp
-        st["prefill_real_tokens"] += sum(len(r.prompt) for _, r in admitted)
+        st["prefill_real_tokens"] += sum(n for _, _, _, n in rows)
         if self._obs_tracer is not None:
+            # TTFT attribution: a request's first-token timestamp is the
+            # completing chunk's sync — mid-prefill chunks don't emit one
             self._obs_tracer.on_prefill(
-                t0, t1, [r.rid for _, r in admitted], b, sp
+                t0, t1, [r.rid for _, _, r in completing], b, sp
             )
         if self._obs_rooflens is not None:
-            self._obs_rooflens.observe_prefill(b, sp, t1 - t0)
+            if bounded:
+                self._obs_rooflens.observe_prefill_chunk(
+                    b, sp, tw * bs, t1 - t0
+                )
+            else:
+                self._obs_rooflens.observe_prefill(b, sp, t1 - t0)
         if self._obs_metrics is not None:
             self._obs_metrics.histogram(
                 "serve.prefill.wall_s", unit="s"
@@ -349,9 +468,18 @@ class Scheduler:
     # decode: single-step (chunk == 1) or device-resident chunk
     # ------------------------------------------------------------------
     def _decode_active(self) -> None:
-        active = [(i, r) for i, r in enumerate(self.slots) if r is not None]
+        # a slot is decode-ready once prefill sampled its first token;
+        # mid-prefill slots (chunked mode, empty `out`) sit the round out
+        active = [
+            (i, r) for i, r in enumerate(self.slots)
+            if r is not None and r.out
+        ]
         if not active:
             return
+        # CoW clones only ever arise from prefix-hit prompt recomputes, and
+        # the prefill launch that caused them drains them — decode writing
+        # a shared page would mean the plan in PagedKVCache._plan is wrong
+        assert self.cache.pending_copies == 0, "unflushed CoW copies at decode"
         if self.chunk > 1:
             self._decode_active_chunked(active)
         else:
@@ -601,6 +729,10 @@ class Scheduler:
         m.gauge("serve.pool.admittable_pages", unit="pages").set(
             occ["admittable"]
         )
+        m.gauge("serve.pool.shared_pages", unit="pages").set(occ["shared"])
+        m.gauge("serve.pool.prefix_cached_pages", unit="pages").set(
+            occ["cached"]
+        )
         m.gauge("serve.slots.active", unit="slots").set(
             sum(1 for r in self.slots if r is not None)
         )
@@ -617,8 +749,12 @@ class Scheduler:
         freed = 0
         for r in self.slots:
             if r is not None:
+                # next query position: decode feeds back the last sampled
+                # token at next_pos - 1; a mid-prefill slot's next chunk
+                # starts at `prefilled`
+                nq = r.next_pos - 1 if r.out else r.prefilled
                 freed += self.cache.free_behind(
-                    r.rid, r.next_pos - self.local_window
+                    r.rid, nq + 1 - self.local_window
                 )
         self._stats["window_freed_pages"] += freed
 
@@ -629,6 +765,11 @@ class Scheduler:
 
     def _evict(self, slot: int) -> None:
         r = self.slots[slot]
+        if r is None:
+            # idempotent: EOS-at-prefill and a length cap can both route a
+            # request here in one round; the second visit is a no-op (the
+            # cache release below is likewise idempotent)
+            return
         self.results[r.rid] = np.asarray(r.out, np.int32)
         self.request_peaks[r.rid] = r.peak_blocks
         self.cache.release(r.rid)
@@ -684,6 +825,14 @@ class Scheduler:
         st["kv_read_bytes_per_token_worst"] = (
             st["kv_pages_read_worst"] * page_bytes / toks
         )
+        # prefix-sharing observables (DESIGN.md §15): hit tokens and CoW
+        # clones are lifetime counters the cache owns; shared/cached pages
+        # are point-in-time occupancy (0 on an idle pool without an index)
+        occ = self.cache.occupancy()
+        st["prefix_hit_tokens"] = self.cache.prefix_hit_tokens
+        st["cow_copies"] = self.cache.cow_copies
+        st["shared_pages"] = occ["shared"]
+        st["prefix_cached_pages"] = occ["cached"]
         assert set(st) <= set(STAT_UNITS), (
             f"undocumented stats keys: {set(st) - set(STAT_UNITS)} — "
             "add units to STAT_UNITS"

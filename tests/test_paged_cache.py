@@ -27,7 +27,11 @@ from repro.serve.paged_cache import BlockAllocator, PagedKVCache
 class _PoolStub:
     """Model stand-in: bookkeeping tests don't need device pools."""
 
-    def init_paged_cache(self, num_blocks, block_size, dtype=jnp.bfloat16):
+    class cfg:
+        kv_quant = "none"
+
+    def init_paged_cache(self, num_blocks, block_size, dtype=jnp.bfloat16,
+                         kv_quant=None):
         return {}
 
 
@@ -284,3 +288,148 @@ def test_fresh_page_scrub_hides_evicted_tenant():
     )
     _, _, pg = paged_gather_kv(pool, jnp.asarray([[1]]))
     assert np.asarray(pg).tolist() == [[0, CACHE_EMPTY_POS]]
+
+
+# ---------------------------------------------------------------------------
+# prefix-sharing / copy-on-write invariants (PR 7)
+# ---------------------------------------------------------------------------
+
+def _index_page_multiset(prefix):
+    """Every page the radix index currently references (one ref each)."""
+    out, stack = [], list(prefix._root.children.values())
+    while stack:
+        n = stack.pop()
+        if n.page is not None:
+            out.append(n.page)
+        stack.extend(n.children.values())
+    return out
+
+
+# op stream for the prefix-sharing battery: admit one of a small family of
+# overlapping prompts, append (continue its prefill/decode writes), window
+# (free_behind), or evict — exercising refcounted free and CoW throughout
+_POPS = st.lists(
+    st.tuples(st.sampled_from(["admit", "append", "window", "evict"]),
+              st.integers(0, 7), st.integers(1, 9)),
+    min_size=1, max_size=50,
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(ops=_POPS, num_blocks=st.integers(8, 24), block_size=st.integers(1, 6),
+       window=st.integers(1, 20))
+def test_prefix_sharing_conserves_pool_and_refcounts(
+    ops, num_blocks, block_size, window
+):
+    """Pool conservation under sharing: free + unique-allocated always sums
+    to the pool size, and every page's refcount equals exactly the number
+    of live tables referencing it plus its index references — under random
+    admit/append/free_behind/evict over prompts with overlapping prefixes."""
+    bs = block_size
+    cache = PagedKVCache(
+        _PoolStub(), num_blocks=num_blocks, block_size=bs, prefix_cache=True
+    )
+    # one shared system prompt, two extensions, and one divergent prompt
+    base = list(range(1, 2 * bs + 1))
+    prompts = [
+        base,
+        base + list(range(100, 100 + bs + 1)),
+        base + list(range(200, 200 + 2 * bs)),
+        list(range(300, 300 + 2 * bs + 1)),
+    ]
+    live = {}  # rid -> [prompt, kv_len, written, inserted]
+    next_rid = 0
+    for kind, pick, n in ops:
+        if kind == "admit":
+            prompt = prompts[pick % len(prompts)]
+            kv_len = len(prompt) + n
+            if cache.can_admit(kv_len, prompt):
+                hit = cache.admit(next_rid, kv_len, prompt=prompt)
+                assert hit <= len(prompt) - 1
+                assert hit <= cache.blocks_held(next_rid) * bs
+                live[next_rid] = [prompt, kv_len, hit, False]
+                next_rid += 1
+        elif kind == "append" and live:
+            rid = sorted(live)[pick % len(live)]
+            prompt, kv_len, written, inserted = live[rid]
+            take = min(n, kv_len - written)
+            if take > 0:
+                slots = cache.write_slots(rid, written, take)
+                for s in slots.tolist():
+                    # CoW contract: a write never lands on a shared page
+                    assert cache.allocator.ref_count(s // bs - 1) == 1
+                live[rid][2] = written + take
+            if not inserted and live[rid][2] >= len(prompt):
+                cache.prefix_insert(rid, prompt)
+                live[rid][3] = True
+        elif kind == "window" and live:
+            rid = sorted(live)[pick % len(live)]
+            cache.free_behind(rid, max(0, live[rid][2] - window))
+        elif kind == "evict" and live:
+            rid = sorted(live)[pick % len(live)]
+            cache.release(rid)
+            cache.release(rid)  # idempotent under sharing too
+            del live[rid]
+        cache.drain_copies(max(1, cache.pending_copies))
+        cache.drain_fresh_rows(num_blocks)
+
+        # conservation: free + unique allocated pages == pool size
+        alloc = cache.allocator
+        assert alloc.free_count + alloc.used_count == num_blocks
+        # exact refcounts: holders are live tables + index references
+        holders = {}
+        for rid in live:
+            for p in cache._tables[rid]:
+                if p is not None:
+                    holders[p] = holders.get(p, 0) + 1
+        for p in _index_page_multiset(cache.prefix):
+            holders[p] = holders.get(p, 0) + 1
+        assert alloc.used_count == len(holders)
+        for p, c in holders.items():
+            assert alloc.ref_count(p) == c
+        assert cache.reserved_blocks <= alloc.free_count
+
+    for rid in list(live):
+        cache.release(rid)
+    occ = cache.occupancy()
+    assert occ["used"] == occ["cached"] == cache.prefix.pages
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    block_size=st.integers(1, 6),
+    forks=st.lists(st.tuples(st.integers(1, 4), st.integers(0, 2)),
+                   min_size=1, max_size=6),
+)
+def test_cow_fork_trees_never_write_shared_pages(block_size, forks):
+    """Fork-tree property: after a donor's prefix is indexed, every fork —
+    whether it diverges mid-prefix or re-submits the donor verbatim
+    (forcing a full-coverage CoW) — only ever writes refcount-1 pages, and
+    the donor's own table survives every fork untouched."""
+    bs = block_size
+    cache = PagedKVCache(
+        _PoolStub(), num_blocks=64, block_size=bs, prefix_cache=True
+    )
+    donor = list(range(1, 4 * bs + 1))
+    cache.admit(0, len(donor) + 2, prompt=donor)
+    cache.write_slots(0, 0, len(donor))
+    cache.prefix_insert(0, donor)
+    donor_table = list(cache._tables[0])
+
+    for i, (cut, tail) in enumerate(forks):
+        prompt = donor[: cut * bs] + [1000 + 10 * i + t for t in range(tail)]
+        if len(prompt) < 2 or not cache.can_admit(len(prompt) + 2, prompt):
+            continue
+        rid = i + 1
+        hit = cache.admit(rid, len(prompt) + 2, prompt=prompt)
+        assert hit == min(cut * bs, len(prompt) - 1)
+        slots = cache.write_slots(rid, hit, len(prompt) + 2 - hit)
+        for s in slots.tolist():
+            assert cache.allocator.ref_count(s // bs - 1) == 1
+        cache.prefix_insert(rid, prompt)
+        # sibling immunity: the donor still owns its exact original pages
+        assert cache._tables[0] == donor_table
+        for p in donor_table:
+            assert cache.allocator.ref_count(p) >= 1
+    cache.drain_copies(max(1, cache.pending_copies))
+    cache.drain_fresh_rows(64)

@@ -1,0 +1,432 @@
+"""Multi-tenant prefix cache (DESIGN.md §15): radix prefix sharing,
+refcounted copy-on-write pages, chunked prefill — plus regression tests for
+the allocator/scheduler lifecycle bugs the feature exposed (non-idempotent
+release/evict, reservation-accounting drift, the drain_fresh overflow hard
+failure).
+
+Golden discipline matches test_serving.py: every sharing/chunking mode must
+reproduce the unshared monolithic greedy output token-for-token — sharing
+is a capacity optimization, never a numerics change."""
+import math
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs.base import get_smoke_config
+from repro.core.codecs import kv_codec_names
+from repro.models.model import Model
+from repro.serve.engine import GenerationEngine
+from repro.serve.paged_cache import BlockAllocator, PagedKVCache
+from repro.serve.scheduler import Scheduler, Request
+
+
+class _Cfg:
+    kv_quant = "none"
+
+
+class _PoolStub:
+    """Model stand-in: the cache only calls init_paged_cache."""
+
+    cfg = _Cfg()
+
+    def init_paged_cache(self, num_blocks, block_size, dtype, kv_quant=None):
+        return {}
+
+
+def _cache(num_blocks=24, block_size=4, prefix=True):
+    return PagedKVCache(
+        _PoolStub(), num_blocks=num_blocks, block_size=block_size,
+        prefix_cache=prefix,
+    )
+
+
+# ---------------------------------------------------------------------------
+# lifecycle regression tests (the three bugfix satellites)
+# ---------------------------------------------------------------------------
+
+def test_release_is_idempotent():
+    """Regression: release() used to do a bare `_tables.pop(rid)` — a second
+    call for the same rid raised KeyError after already freeing the pages
+    (double-free on the retry path)."""
+    c = _cache(prefix=False)
+    c.admit(7, 10)
+    c.write_slots(7, 0, 10)
+    c.release(7)
+    assert c.free_blocks == c.num_blocks
+    c.release(7)           # second teardown: no-op, no KeyError
+    c.release(99)          # never-admitted rid: also a no-op
+    assert c.free_blocks == c.num_blocks
+
+
+def test_scheduler_double_evict_is_noop():
+    """Regression: _evict could be reached twice for one request in a round
+    (EOS at prefill + length cap); the second visit must be a no-op."""
+    c = _cache(prefix=False)
+    sched = Scheduler(
+        c, max_slots=1, max_len=64,
+        prefill_fn=lambda *a: None, decode_fn=lambda *a: None,
+        sample_fn=lambda *a: None,
+    )
+    r = Request(rid=0, prompt=np.arange(5, dtype=np.int32), max_new_tokens=2)
+    c.admit(r.rid, sched._kv_len(r))
+    c.write_slots(r.rid, 0, 5)
+    r.out = [1, 2]
+    sched.slots[0] = r
+    sched._evict(0)
+    assert sched.slots[0] is None
+    assert c.free_blocks == c.num_blocks
+    first = dict(sched.results)
+    sched._evict(0)        # second visit: slot already empty
+    assert sched.results == first
+    assert c.free_blocks == c.num_blocks
+
+
+def test_reservation_accounting_is_exact():
+    """Regression: write_slots used to clamp `_reserved[rid]` at 0, hiding
+    allocation past the admission reservation. Now each lazy page consumes
+    exactly one reserved page and overshooting raises instead of silently
+    corrupting the admission headroom."""
+    c = _cache(num_blocks=8, block_size=4, prefix=False)
+    c.admit(1, 8)          # 2 pages reserved
+    assert c.reserved_blocks == 2
+    c.write_slots(1, 0, 8)
+    assert c.reserved_blocks == 0
+    with pytest.raises(RuntimeError, match="reservation"):
+        c.write_slots(1, 8, 1)   # third page was never reserved
+    c.release(1)
+    assert c.free_blocks == 8
+
+
+def test_reservation_conserved_under_random_lifecycle():
+    """Deterministic random admit/append/free_behind/evict stream: the pool
+    never leaks — free + uniquely-held pages always sum to num_blocks,
+    outstanding reservations never exceed the free list, and free_behind
+    never disturbs reservation bookkeeping (the drift this PR fixes)."""
+    rng = np.random.default_rng(0)
+    bs = 4
+    c = _cache(num_blocks=16, block_size=bs, prefix=False)
+    live = {}  # rid -> (kv_len, written)
+    next_rid = 0
+    for _ in range(400):
+        op = rng.choice(["admit", "append", "window", "evict"])
+        if op == "admit":
+            kv_len = int(rng.integers(1, 3 * bs))
+            if c.can_admit(kv_len):
+                reserved_before = c.reserved_blocks
+                c.admit(next_rid, kv_len)
+                assert c.reserved_blocks == reserved_before + c.blocks_for(kv_len)
+                live[next_rid] = [kv_len, 0]
+                next_rid += 1
+        elif op == "append" and live:
+            rid = int(rng.choice(list(live)))
+            kv_len, written = live[rid]
+            n = int(rng.integers(1, 4))
+            n = min(n, kv_len - written)
+            if n > 0:
+                c.write_slots(rid, written, n)
+                live[rid][1] = written + n
+        elif op == "window" and live:
+            rid = int(rng.choice(list(live)))
+            reserved_before = c.reserved_blocks
+            c.free_behind(rid, max(0, live[rid][1] - bs))
+            # freeing behind the window restores free pages but must not
+            # touch any request's reservation
+            assert c.reserved_blocks == reserved_before
+        elif op == "evict" and live:
+            rid = int(rng.choice(list(live)))
+            c.release(rid)
+            del live[rid]
+        used = c.allocator.used_count
+        assert c.free_blocks + used == c.num_blocks
+        assert used == sum(c.blocks_held(r) for r in live)
+        assert c.reserved_blocks <= c.free_blocks
+    for rid in list(live):
+        c.release(rid)
+    assert c.free_blocks == c.num_blocks
+    assert c.reserved_blocks == 0
+
+
+def test_drain_fresh_rows_splits_overflow():
+    """Regression: drain_fresh raised ValueError mid-admission when a round
+    allocated more fresh pages than pad_to — with the pages already
+    allocated and no recovery. drain_fresh_rows returns the overflow as
+    extra fixed-shape rows instead."""
+    c = _cache(num_blocks=12, block_size=4, prefix=False)
+    c.admit(1, 20)         # 5 pages
+    c.write_slots(1, 0, 20)
+    rows = c.drain_fresh_rows(2)
+    assert [r.shape for r in rows] == [(2,), (2,), (2,)]
+    flat = np.concatenate(rows)
+    assert sorted(flat[flat != 0]) == [1, 2, 3, 4, 5]  # device ids, 5 pages
+    # drained: a second call returns one empty row
+    assert [r.tolist() for r in c.drain_fresh_rows(2)] == [[0, 0]]
+    # the single-row wrapper keeps the loud failure for callers that can't
+    # scrub out-of-step
+    c.admit(2, 12)
+    c.write_slots(2, 0, 12)
+    with pytest.raises(ValueError, match="fresh pages"):
+        c.drain_fresh(2)
+
+
+# ---------------------------------------------------------------------------
+# prefix index + refcount/CoW host-side mechanics
+# ---------------------------------------------------------------------------
+
+def test_refcounted_allocator_frees_on_last_holder():
+    a = BlockAllocator(4)
+    b = a.alloc()
+    a.incref(b)
+    assert a.ref_count(b) == 2 and a.shared_count == 1
+    assert a.free([b]) == []          # first drop: survives
+    assert a.free([b]) == [b]         # last holder: back on the free list
+    with pytest.raises(ValueError, match="double-free"):
+        a.free([b])
+
+
+def test_prefix_hit_reserves_only_the_tail():
+    bs = 4
+    c = _cache(num_blocks=24, block_size=bs)
+    prompt = np.arange(12, dtype=np.int32)         # 3 full pages
+    assert c.admit(1, 19, prompt=prompt) == 0      # cold: nothing cached
+    c.write_slots(1, 0, 12)
+    c.prefix_insert(1, prompt)
+    assert c.occupancy()["cached"] == 3
+
+    # same prompt again: hit capped at P-1 (last token is recomputed), and
+    # the reservation covers only the tail + the inevitable CoW clone
+    free0, reserved0 = c.free_blocks, c.reserved_blocks
+    hit = c.admit(2, 19, prompt=prompt)
+    assert hit == 11
+    # blocks_for(19)=5, 3 hit pages, +1 clone -> 3 reserved
+    assert c.reserved_blocks - reserved0 == 3
+    assert c.free_blocks == free0                  # sharing allocates nothing
+    assert c.prefix_hit_tokens == 11
+
+    # recomputing the last prompt token CoWs the shared page
+    slots = c.write_slots(2, 11, 1)
+    assert c.cow_copies == 1 and c.pending_copies == 1
+    src_dst = c.drain_copies(2)
+    src, dst = int(src_dst[0, 0]), int(src_dst[0, 1])
+    assert src != dst and dst == slots[0] // bs
+    # donor and index still hold the original
+    assert c.allocator.ref_count(src - 1) == 2
+
+
+def test_cow_targets_are_never_shared_host_level():
+    """Host-level sibling-immunity: every slot write_slots hands out targets
+    a page with exactly one holder at that moment — a shared page is cloned
+    first, so no write can ever land in a sibling's (or the index's) page."""
+    rng = np.random.default_rng(1)
+    bs = 4
+    c = _cache(num_blocks=48, block_size=bs)
+    base = rng.integers(0, 100, 2 * bs).tolist()
+    rid = 0
+    for fork in range(8):
+        if fork % 2 == 1:
+            # re-admit the shared root itself: its pages are fully cached,
+            # so recomputing the last root token forces the CoW path
+            prompt = np.asarray(base, np.int32)
+        else:
+            # extend the shared root by a random divergent tail
+            tail = rng.integers(100, 200, int(rng.integers(1, 2 * bs))).tolist()
+            prompt = np.asarray(base + tail, np.int32)
+        kv_len = len(prompt) + 3
+        if not c.can_admit(kv_len, prompt):
+            break
+        hit = c.admit(rid, kv_len, prompt=prompt)
+        for p in range(hit, kv_len):
+            (slot,) = c.write_slots(rid, p, 1)
+            page = slot // bs - 1
+            assert c.allocator.ref_count(page) == 1, (
+                f"write for rid {rid} landed on a page with "
+                f"{c.allocator.ref_count(page)} holders"
+            )
+        c.prefix_insert(rid, prompt)
+        c.drain_copies(4)
+        c.drain_fresh_rows(8)
+        if rng.random() < 0.5:
+            c.release(rid)
+        rid += 1
+    assert c.cow_copies >= 1           # the fork tree did exercise CoW
+    occ = c.occupancy()
+    assert occ["used"] + occ["free"] == c.num_blocks
+
+
+def test_prefix_eviction_lru_and_headroom():
+    bs = 4
+    c = _cache(num_blocks=8, block_size=bs)
+    for rid, lo in enumerate((0, 100)):
+        prompt = np.arange(lo, lo + 2 * bs, dtype=np.int32)
+        c.admit(rid, 2 * bs, prompt=prompt)
+        c.write_slots(rid, 0, 2 * bs)
+        c.prefix_insert(rid, prompt)
+        c.release(rid)
+    assert c.occupancy()["cached"] == 4
+    # touch the first prompt so the second becomes LRU
+    c.prefix.lookup(np.arange(0, 2 * bs, dtype=np.int32))
+    # admission that needs the cached pages evicts LRU leaves, not the hits
+    prompt = np.arange(0, 2 * bs, dtype=np.int32)
+    assert c.can_admit(7 * bs, prompt=prompt)
+    hit = c.admit(9, 7 * bs, prompt=prompt)
+    assert hit == 2 * bs - 1
+    occ = c.occupancy()
+    # the LRU tenant's 2 pages were reclaimed; the hit chain survives
+    assert occ["cached"] == 2
+    c.release(9)
+
+
+# ---------------------------------------------------------------------------
+# engine-level golden equivalence: sharing/chunking never changes tokens
+# ---------------------------------------------------------------------------
+
+KV_FORMATS = ["none"] + sorted(kv_codec_names())
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = get_smoke_config("llama3-8b")
+    m = Model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _shared_prompts(vocab, seed=3):
+    """8 prompts over 2 system prompts with mixed tails, one tail landing
+    exactly on a page boundary (the full-coverage CoW case at bs=8)."""
+    rng = np.random.default_rng(seed)
+    sys_a = rng.integers(1, vocab, 19).tolist()
+    sys_b = rng.integers(1, vocab, 16).tolist()   # page-aligned at bs=8
+    tails = [rng.integers(1, vocab, k).tolist() for k in (3, 9, 1, 5, 13)]
+    return [np.asarray(p, np.int32) for p in (
+        sys_a + tails[0], sys_a + tails[1], sys_b,
+        sys_b + tails[2], sys_a + tails[3], sys_b + tails[4],
+        sys_a,
+        sys_b,   # repeat of the page-aligned donor: forces full-cover CoW
+    )]
+
+
+def _run_engine(m, params, prompts, n_steps, **kw):
+    eng = GenerationEngine(
+        m, params, max_len=64, block_size=8, max_slots=2, num_blocks=24,
+        decode_chunk=4, **kw,
+    )
+    rids = [eng.submit(p, max_new_tokens=n_steps) for p in prompts]
+    done = eng.run_until_drained()
+    return [done[r] for r in rids], eng
+
+
+@pytest.mark.parametrize("fmt", KV_FORMATS)
+def test_shared_prefix_greedy_bit_identical(llama, fmt):
+    """Prefix sharing (hits, CoW, refcounted eviction) reproduces the
+    unshared greedy output token-for-token, for every KV codec — shared
+    pages hold the same encoded KV a private prefill would write."""
+    m, params = llama
+    kw = {} if fmt == "none" else {"kv_quant": fmt}
+    prompts = _shared_prompts(m.cfg.vocab_size)
+    want, _ = _run_engine(m, params, prompts, 4, **kw)
+    got, eng = _run_engine(m, params, prompts, 4, prefix_cache=True, **kw)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+    st = eng.scheduler.stats()
+    assert st["prefix_hit_tokens"] > 0      # sharing actually happened
+    assert st["cow_copies"] >= 1            # incl. the exact-cover forks
+    occ = eng.kv.occupancy()
+    # drained pool: only the prefix index still pins pages
+    assert occ["used"] == occ["cached"] > 0
+
+
+@pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >=2 devices (set XLA_FLAGS=--xla_force_host_platform_device_count)",
+)
+def test_shared_prefix_bit_identical_under_mesh(llama):
+    """Prefix sharing + CoW page clones under a (data=2, model=1) mesh —
+    the clone's gather/scatter respects the pool sharding."""
+    from repro.launch.mesh import make_test_mesh
+
+    m, params = llama
+    prompts = _shared_prompts(m.cfg.vocab_size)
+    want, _ = _run_engine(m, params, prompts, 4)
+    got, eng = _run_engine(
+        m, params, prompts, 4, prefix_cache=True, mesh=make_test_mesh(2, 1)
+    )
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+    assert eng.scheduler.stats()["prefix_hit_tokens"] > 0
+
+
+@pytest.mark.parametrize("chunk", [1, 5, 8])
+def test_chunked_prefill_token_identical(llama, chunk):
+    """Chunked prefill — including 1-token chunks and page-aligned chunks —
+    is token-for-token the monolithic prefill, with and without sharing."""
+    m, params = llama
+    prompts = _shared_prompts(m.cfg.vocab_size)
+    want, _ = _run_engine(m, params, prompts, 4)
+    got, eng = _run_engine(m, params, prompts, 4, prefill_chunk=chunk)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+    st = eng.scheduler.stats()
+    assert st["prefill_chunk_calls"] > 0
+    got2, eng2 = _run_engine(
+        m, params, prompts, 4, prefill_chunk=chunk, prefix_cache=True
+    )
+    for a, b in zip(want, got2):
+        np.testing.assert_array_equal(a, b)
+    assert eng2.scheduler.stats()["prefix_hit_tokens"] > 0
+
+
+def test_cow_never_mutates_sibling_pool_pages(llama):
+    """Device-level sibling immunity: snapshot the donor's cached prefix
+    pages in the pool, fork a diverging tenant through them (forcing a
+    CoW), and require the shared pages' bytes to be untouched."""
+    m, params = llama
+    rng = np.random.default_rng(5)
+    sysp = rng.integers(1, m.cfg.vocab_size, 16).tolist()  # 2 pages at bs=8
+    donor = np.asarray(sysp, np.int32)
+    # A verbatim re-submission is the only fork shape that is *fully*
+    # covered by the cached pages (P <= n_hit*bs): its recomputed last
+    # prompt token must land on a shared page, forcing exactly one CoW.
+    fork = np.asarray(sysp, np.int32)
+
+    eng = GenerationEngine(
+        m, params, max_len=64, block_size=8, max_slots=1, num_blocks=24,
+        decode_chunk=2, prefix_cache=True,
+    )
+    rid0 = eng.submit(donor, max_new_tokens=3)
+    eng.run_until_drained()
+    pages = eng.kv.prefix.lookup(donor)
+    assert len(pages) == 2
+    dev = [p + 1 for p in pages]
+
+    def snap():
+        return {
+            name: np.asarray(pool[..., dev, :, :, :] if pool.ndim == 5
+                             else pool[..., dev, :]).copy()
+            for name, pool in eng.kv.pools.items()
+        }
+
+    before = snap()
+    rid1 = eng.submit(fork, max_new_tokens=3)
+    out = eng.run_until_drained()
+    st = eng.scheduler.stats()
+    assert st["prefix_hit_tokens"] == 15    # P-1 of the exact-cover donor
+    assert st["cow_copies"] == 1
+    after = snap()
+    for name in before:
+        np.testing.assert_array_equal(
+            before[name], after[name],
+            err_msg=f"shared page plane {name!r} mutated by the fork",
+        )
+    # and the fork still decoded something sane
+    assert len(out[rid1]) == 3
+
+
+def test_prefix_cache_defaults_off(llama):
+    """The index retains pages by design — so it must be opt-in: a default
+    engine's pool drains back to empty (the PR 6 gauge contract)."""
+    m, params = llama
+    prompts = _shared_prompts(m.cfg.vocab_size)[:2]
+    _, eng = _run_engine(m, params, prompts, 3)
+    occ = eng.kv.occupancy()
+    assert occ["used"] == 0 and occ["cached"] == 0
+    assert eng.kv.prefix is None
