@@ -1,0 +1,109 @@
+"""PR 8 deliverable: self-speculative decoding throughput (DESIGN.md §16).
+
+Same pool, same traffic, same seed as the PR 5 long-context decode bench
+(`bench_serving._long_ctx_tok_s`: prompts 512-640 in a max_len-4096 /
+block_size-32 pool, 4 slots, 48 new tokens, bf8 KV, dense f32 weights;
+prefill excluded) — the KV- and weight-stream shape speculation exists to
+amortize. `spec=None` is the in-tree baseline: the §13 fused chunked
+decode loop, one target forward per token. The speculative engine drafts
+`k` tokens per round with the SAME weight tree re-encoded at
+`draft_codec` (bf16 here: half the f32 target's stream bytes, near-unity
+acceptance) and verifies them in one batched `S=k+1` target forward.
+
+Output is bit-identical either way (tests/test_spec_decode.py), so the
+committed numbers are pure throughput: decode tokens/sec must be strictly
+above the non-speculative engine and the acceptance rate strictly above
+one token per verify. BENCH_PR8.json, guarded by check_regression.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import jax
+
+from benchmarks.bench_serving import _drain_decode_tok_s
+from benchmarks.common import row
+from repro.configs.base import get_smoke_config
+from repro.models.model import Model
+from repro.serve.engine import GenerationEngine, SpecConfig
+
+SPEC = SpecConfig(k=7, draft_codec="bf16", rounds=1)
+
+
+def _spec_tok_s(
+    spec: Optional[SpecConfig], *, n_requests: int = 4, n_steps: int = 48,
+    prompt_len: int = 512, max_len: int = 4096, reps: int = 2,
+) -> Tuple[float, Dict[str, float]]:
+    """Pure-decode tokens/sec at long contexts, PR 5 config and seed;
+    `spec=None` is the plain fused chunk loop, otherwise the draft/verify
+    rounds. Returns (tok/s, scheduler stats)."""
+    cfg = dataclasses.replace(
+        get_smoke_config("llama3-8b"),
+        d_model=128, n_heads=8, n_kv_heads=4, d_head=32, d_ff=256,
+        kv_quant="bf8",
+    )
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+        for n in rng.integers(prompt_len, prompt_len + 129, n_requests)
+    ]
+    engine = GenerationEngine(
+        model, params, max_len=max_len, block_size=32, max_slots=4,
+        decode_chunk=8, spec_decode=spec,
+    )
+    _drain_decode_tok_s(engine, prompts, n_steps)  # warmup: compile
+    best = max(
+        _drain_decode_tok_s(engine, prompts, n_steps) for _ in range(reps)
+    )
+    return best, engine.scheduler.stats()
+
+
+def spec_decode_results(**kw) -> Dict[str, float]:
+    """Before/after numbers for BENCH_PR8.json and check_regression.py."""
+    before, _ = _spec_tok_s(None, **kw)
+    after, st = _spec_tok_s(SPEC, **kw)
+    return {
+        "decode_tok_s_before": round(before, 2),
+        "decode_tok_s_after": round(after, 2),
+        "speedup": round(after / before, 3),
+        "accepted_tokens_per_step": round(st["accepted_tokens_per_step"], 3),
+        "draft_tokens": st["draft_tokens"],
+        "verify_calls": st["verify_calls"],
+        "k": SPEC.k,
+        "draft_codec": SPEC.draft_codec,
+        "prompt_len": kw.get("prompt_len", 512),
+        "max_len": kw.get("max_len", 4096),
+    }
+
+
+def spec_row(res: Dict[str, float]) -> Dict[str, str]:
+    """CSV row shared by `benchmarks/run.py spec_decode` and
+    check_regression's --csv-append (one measurement, two consumers)."""
+    return row(
+        "spec_decode",
+        0.0,
+        f"tok_s_before={res['decode_tok_s_before']} "
+        f"tok_s_after={res['decode_tok_s_after']} "
+        f"speedup={res['speedup']}x "
+        f"accepted_per_step={res['accepted_tokens_per_step']} "
+        f"k={res['k']} draft={res['draft_codec']} "
+        f"prompt_len={res['prompt_len']} max_len={res['max_len']}",
+    )
+
+
+def bench_spec_decode():
+    return [spec_row(spec_decode_results())]
+
+
+if __name__ == "__main__":
+    res = spec_decode_results()
+    print(res)
+    t = time.strftime("%H:%M:%S")
+    print(f"[{t}] spec decode: {res['decode_tok_s_before']} -> "
+          f"{res['decode_tok_s_after']} tok/s ({res['speedup']}x), "
+          f"{res['accepted_tokens_per_step']} accepted/verify")

@@ -25,6 +25,11 @@ Benchmarks:
                      (DESIGN.md §15): steady-state shared-prefix traffic,
                      prefix-hit TTFT must strictly beat cold TTFT and the
                      peak KV pool bytes must be strictly lower
+    spec_decode      BENCH_PR8.json — self-speculative decoding
+                     (DESIGN.md §16): low-bit draft + batched verify at the
+                     PR 5 long-context shape; spec decode tokens/sec must
+                     strictly beat the non-speculative engine and the
+                     acceptance rate must stay above one token per verify
 """
 from __future__ import annotations
 
@@ -61,6 +66,12 @@ def _prefix_serving():
     from benchmarks.bench_prefix import prefix_row, prefix_serving_results
 
     return prefix_serving_results(), prefix_row
+
+
+def _spec_decode():
+    from benchmarks.bench_spec import spec_decode_results, spec_row
+
+    return spec_decode_results(), spec_row
 
 
 def _check_speedup(name: str, base, res) -> bool:
@@ -130,6 +141,34 @@ def _check_prefix(name: str, base, res) -> bool:
     return ok
 
 
+def _check_spec(name: str, base, res) -> bool:
+    """Speculation guard: the speculative engine must *strictly* beat the
+    non-speculative engine (retaining a quarter of the committed margin —
+    the two paths share every kernel, so the ratio is machine-portable)
+    and the acceptance rate must stay above one token per verify pass (at
+    or below 1.0, speculation degenerates into sequential decode with
+    extra draft work)."""
+    need = max(1.0, 1.0 + 0.25 * (base["speedup"] - 1.0))
+    print(
+        f"[{name}] baseline: {base['decode_tok_s_before']} -> "
+        f"{base['decode_tok_s_after']} tok/s ({base['speedup']}x) at "
+        f"{base['accepted_tokens_per_step']} accepted/verify\n"
+        f"[{name}] this run: {res['decode_tok_s_before']} -> "
+        f"{res['decode_tok_s_after']} tok/s ({res['speedup']}x) at "
+        f"{res['accepted_tokens_per_step']} accepted/verify\n"
+        f"[{name}] required: speedup > {need:.3f}, accepted/verify > 1.0"
+    )
+    ok = True
+    if not res["speedup"] > need:  # catches nan too
+        print(f"[{name}] REGRESSION: speculative decode no longer beats "
+              "the sequential engine")
+        ok = False
+    if not res["accepted_tokens_per_step"] > 1.0:
+        print(f"[{name}] REGRESSION: acceptance fell to sequential rate")
+        ok = False
+    return ok
+
+
 MANIFEST = {
     "decode_chunk": {
         "baseline": "BENCH_PR4.json",
@@ -184,6 +223,22 @@ MANIFEST = {
             "speedup and the peak-pool-bytes ratio"
         ),
         "check": _check_prefix,
+    },
+    "spec_decode": {
+        "baseline": "BENCH_PR8.json",
+        "run": _spec_decode,
+        "note": (
+            "self-speculative decoding at the PR 5 long-context shape "
+            "(prompts 512-640 in a max_len-4096 / block_size-32 pool, 4 "
+            "slots, 48 new tokens, bf8 KV, dense f32 weights; prefill "
+            "excluded): before = the fused chunked decode loop (one "
+            "target forward per token), after = k=7 draft steps with the "
+            "same weights re-encoded at bf16 (half the target stream "
+            "bytes) + one batched S=8 verify forward per round, "
+            "bit-identical output; guards the spec-over-sequential "
+            "speedup and accepted tokens per verify > 1"
+        ),
+        "check": _check_spec,
     },
 }
 

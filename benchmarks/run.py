@@ -12,6 +12,7 @@ from benchmarks import bench_latency as bl
 from benchmarks import bench_prefix as bp
 from benchmarks import bench_paper_tables as pt
 from benchmarks import bench_serving as bs
+from benchmarks import bench_spec as bsp
 from benchmarks import bench_tpu_fused as tf
 from benchmarks.common import emit
 
@@ -34,6 +35,7 @@ ALL = [
     ("paged_attention", bs.bench_paged_attention_decode),
     ("serving_latency", bl.bench_serving_latency),
     ("prefix_serving", bp.bench_prefix_serving),
+    ("spec_decode", bsp.bench_spec_decode),
 ]
 
 

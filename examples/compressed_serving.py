@@ -81,6 +81,16 @@ def main():
                          "request per scheduler round, interleaved with "
                          "decode (default: whole prompt in one launch); "
                          "implies --paged")
+    ap.add_argument("--spec-k", type=int, default=0, metavar="K",
+                    help="self-speculative decoding: per round, propose K "
+                         "tokens with a cheaper re-encoding of the SAME "
+                         "weights and verify them in one batched target "
+                         "forward — bit-identical output, >1 accepted "
+                         "token per verify is the win; implies --paged")
+    ap.add_argument("--draft-codec", default="nf4", metavar="FMT",
+                    help="codec the draft weight tree is re-encoded with "
+                         "(default nf4; any registry format works — "
+                         "cheaper drafts propose faster but accept less)")
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="record the request lifecycle and export a Chrome "
                          "trace (open in Perfetto); implies --paged")
@@ -89,7 +99,8 @@ def main():
                          "serve.* counters/gauges/histograms after the "
                          "run; implies --paged")
     args = ap.parse_args()
-    if args.trace or args.metrics or args.prefix_cache or args.prefill_chunk:
+    if (args.trace or args.metrics or args.prefix_cache or args.prefill_chunk
+            or args.spec_k):
         # these features all live in the paged scheduler path
         args.paged = True
 
@@ -124,13 +135,24 @@ def main():
             from repro.obs import Observability
 
             obs = Observability.default()
+        spec_cfg = None
+        if args.spec_k:
+            from repro.serve.engine import SpecConfig
+
+            spec_cfg = SpecConfig(k=args.spec_k, draft_codec=args.draft_codec)
         engine = GenerationEngine(model, cparams, max_len=128,
                                   temperature=0.0, mesh=mesh,
                                   block_size=args.block_size, max_slots=4,
                                   kv_quant=args.kv_quant,
                                   decode_chunk=args.chunk,
                                   prefix_cache=args.prefix_cache,
-                                  prefill_chunk=args.prefill_chunk, obs=obs)
+                                  prefill_chunk=args.prefill_chunk, obs=obs,
+                                  spec_decode=spec_cfg)
+        if spec_cfg is not None:
+            draft_bytes = compressed_bytes(engine.draft_params)
+            print(f"self-speculation: k={args.spec_k} draft={args.draft_codec} "
+                  f"({draft_bytes/1e6:.2f} MB draft tree, "
+                  f"{engine.spec_rounds} rounds/launch)")
         if args.kv_quant:
             print(f"KV pools quantized with {args.kv_quant}: "
                   f"{engine.kv.bytes_per_token():.0f} B/token (all layers)")
@@ -157,6 +179,11 @@ def main():
               f"peak_blocks={st['peak_blocks']} "
               f"mean_occupancy={st['mean_occupancy']:.2f} "
               f"padding_waste_saved={st['padding_waste_saved']:.2%}")
+        if spec_cfg is not None:
+            print(f"speculation: accepted_tokens_per_step="
+                  f"{st['accepted_tokens_per_step']:.2f} "
+                  f"(draft_tokens={st['draft_tokens']} "
+                  f"verify_calls={st['verify_calls']})")
         if args.prefix_cache:
             occ = engine.kv.occupancy()
             print(f"prefix cache: hit_tokens={st['prefix_hit_tokens']} "

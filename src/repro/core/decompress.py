@@ -105,6 +105,70 @@ def compress_tree(params: Any, spec: CompressionSpec) -> Any:
     return jax.tree_util.tree_map_with_path(one, params)
 
 
+def _decompress_leaf(ct: CompressedTensor) -> np.ndarray:
+    """Dense f32 weights back out of a (possibly stacked) CompressedTensor.
+
+    Stacked leaves store per-2D-slice planes under lead dims (see
+    `_compress_leaf`); 2D codes are always (ng, packed_k, N), so the lead
+    dims are whatever `codes` carries beyond rank 3."""
+    from repro.kernels import ref
+
+    codes = np.asarray(ct.codes)
+    lead = codes.shape[: codes.ndim - 3]
+    if not lead:
+        return np.asarray(ref.decompress(ct, out_dtype=jnp.float32))
+
+    def plane(a):
+        if a is None:
+            return None
+        a = np.asarray(a)
+        return a.reshape((-1,) + a.shape[len(lead):])
+
+    fc, fm, fs = plane(ct.codes), plane(ct.mask), plane(ct.scales)
+    slices = [
+        np.asarray(ref.decompress(
+            CompressedTensor(
+                codes=fc[i],
+                mask=None if fm is None else fm[i],
+                scales=None if fs is None else fs[i],
+                spec=ct.spec, shape=ct.shape,
+            ),
+            out_dtype=jnp.float32,
+        ))
+        for i in range(fc.shape[0])
+    ]
+    return np.stack(slices).reshape(lead + ct.shape)
+
+
+def make_draft_tree(params: Any, draft_spec: CompressionSpec) -> Any:
+    """Self-speculation draft weights: re-encode the weight tree at a
+    cheaper codec — no second checkpoint, no training (DESIGN.md §16).
+
+    Every `CompressedTensor` leaf is decompressed (so the draft quantizes
+    the *same* numbers the target serves, target-codec error included) and
+    re-compressed at `draft_spec`; eligible dense FC leaves compress
+    directly. Everything else — embeddings, norms, ineligible weights — is
+    shared with the target tree by reference: the draft model costs only
+    its re-encoded FC planes, typically ~4x fewer bytes than bf16 at a
+    4-bit draft codec, which is the whole point (draft decode is
+    weight-bandwidth bound)."""
+
+    def one(path, leaf):
+        if isinstance(leaf, CompressedTensor):
+            if leaf.shape[-2] % draft_spec.group:
+                return leaf  # draft group doesn't divide K: share the target
+            return _compress_leaf(_decompress_leaf(leaf), draft_spec)
+        name = "/".join(p.key if hasattr(p, "key") else str(p) for p in path)
+        arr = np.asarray(jax.device_get(leaf), dtype=np.float32)
+        if not _eligible(name, arr, draft_spec):
+            return leaf
+        return _compress_leaf(arr, draft_spec)
+
+    return jax.tree_util.tree_map_with_path(
+        one, params, is_leaf=lambda x: isinstance(x, CompressedTensor)
+    )
+
+
 def compressed_bytes(params: Any) -> int:
     """Total stored bytes of a (possibly partially) compressed tree."""
     total = 0

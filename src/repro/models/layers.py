@@ -466,6 +466,7 @@ def paged_attention_block(
     fresh_pages: Optional[jax.Array] = None,  # (F,)
     kv_lens: Optional[jax.Array] = None,      # (B,) valid KV tokens per slot
     copy_pages: Optional[jax.Array] = None,   # (C, 2) CoW (src, dst) pages
+    window_override: Optional[int] = None,    # cap attn window (spec draft)
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Attention layer against the paged pool: proj -> per-request rope ->
     scatter into pool -> read -> attn -> out.
@@ -505,6 +506,11 @@ def paged_attention_block(
         quant=cfg.kv_quant,
     )
     window = cfg.window if local else 0
+    if window_override:
+        # spec-decode draft passes: a sliding-window cap trades a little
+        # draft accuracy for an O(window) fused page walk (DESIGN.md §16);
+        # verify passes never set it, so acceptance stays exact
+        window = min(window, window_override) if window else window_override
     if kv_lens is not None and s == 1 and kernel_ops.PAGED_ATTENTION_FUSED:
         att = kernel_ops.paged_attention(
             q[:, 0], new_cache, block_tables, kv_lens, tok_pos[:, 0],

@@ -221,6 +221,7 @@ class Model:
                     fresh_pages=paged.get("fresh_pages"),
                     kv_lens=paged.get("kv_lens"),
                     copy_pages=paged.get("copy_pages"),
+                    window_override=paged.get("window_override"),
                 )
             else:
                 out, new_cache = L.attention_block(
@@ -466,3 +467,152 @@ class Model:
             (positions, write_slots, write_pos, fresh_pages, kv_lens),
         )
         return toks, new_cache
+
+    def spec_decode_chunk(
+        self,
+        params: Params,
+        draft_params: Params,
+        tokens0: jax.Array,       # (M, 1) pending token per slot (KV unwritten)
+        cache: Any,               # init_paged_cache pool tree
+        block_tables: jax.Array,  # (M, TW) device page ids, bounded width
+        p0: jax.Array,            # (M,) position of the pending token
+        fresh: jax.Array,         # (F,) device page ids to pre-scrub (0 = noop)
+        *,
+        sample_fn: Callable[[jax.Array, jax.Array], jax.Array],
+        max_steps: jax.Array,     # (M,) emissions this slot may still take
+        eos_ids: jax.Array,       # (M,) int32 eos token, -1 = none
+        active: jax.Array,        # (M,) bool — slot holds a live request
+        k: int,
+        rounds: int,
+        block_size: int,
+        draft_window: int = 0,
+        out_cap: Optional[int] = None,
+    ) -> Tuple[jax.Array, jax.Array, Any]:
+        """Device-resident speculative decode: `rounds` draft-k/verify-once
+        rounds in one `lax.scan` (DESIGN.md §16).
+
+        Per-slot state between rounds is (committed positions < pos,
+        pending token at `pos` with KV unwritten). A round drafts k tokens
+        through `draft_params` — k fused S=1 steps, optionally window-capped
+        via `draft_window` — writing draft-weight KV as it goes, then runs
+        ONE target forward over the k+1 positions [pending, d_1..d_k],
+        overwriting every draft entry with target KV before the bounded
+        gather-read. Greedy/keyed sampling of the k+1 verify rows uses
+        `sample_fn(logits (M,S,V), chunk_idx (M,S))` on the SAME
+        per-(rid, output-index) key stream the sequential path uses — the
+        draft proposes with it too — so the accepted prefix plus bonus
+        token is bit-identical to sequential decode.
+
+        Rejected drafts are never rolled back on device: their entries sit
+        at positions > every committed query position (causally masked,
+        DESIGN.md §13) until the next round's writes — which start at the
+        new pending position ≤ stale-min — overwrite them. Writes that
+        would run past `p0 + max_steps` (drafts overhanging a slot's
+        emission budget) route to the null page with the empty sentinel,
+        so the host's page reservation is never exceeded; whole-page
+        overhang left at chunk end is trimmed by
+        `PagedKVCache.rollback`.
+
+        Returns (out (out_cap, M) emitted tokens packed from row 0,
+        e_rounds (rounds, M) per-round emission counts for host replay,
+        new cache)."""
+        cfg = self.cfg
+        m = tokens0.shape[0]
+        bs = block_size
+        tw = block_tables.shape[1]
+        if out_cap is None:
+            out_cap = rounds * (k + 1)
+        limit = p0 + max_steps  # first write position past the slot's budget
+
+        cache = self.paged_scrub(cache, fresh)
+        offs = jnp.arange(k + 1, dtype=jnp.int32)
+
+        def slots_for(wpos, ok):
+            # flat slot ids from the bounded table; invalid writes land on
+            # the null page with the empty sentinel (inactive-slot idiom)
+            idx = jnp.clip(wpos // bs, 0, tw - 1)
+            page = jnp.take_along_axis(block_tables, idx, axis=1)
+            page = jnp.where(ok, page, 0)
+            return page * bs + wpos % bs, jnp.where(ok, wpos, L.CACHE_EMPTY_POS)
+
+        def fwd(pp, pools, toks, wpos, ok, klen, wov):
+            wslot, eff = slots_for(wpos, ok)
+            pos = wpos
+            if cfg.mrope_sections:
+                pos = jnp.broadcast_to(pos, (3,) + pos.shape)
+            logits, pools, _ = self.forward(
+                pp, tokens=toks, positions=pos, cache=pools,
+                paged={
+                    "block_tables": block_tables,
+                    "write_slots": wslot,
+                    "write_pos": eff,
+                    "kv_lens": klen,
+                    "window_override": wov,
+                },
+            )
+            return logits, pools
+
+        def round_body(carry, _):
+            pools, tok, pos, emitted, done, out = carry
+            live = ~done
+
+            # draft phase: k proposals, draft weights, fused S=1 walks
+            def draft_body(dc, j):
+                dpools, dtok = dc
+                wpos = (pos + j)[:, None]
+                ok = live[:, None] & (wpos < limit[:, None])
+                logits, dpools = fwd(
+                    draft_params, dpools, dtok, wpos, ok,
+                    jnp.minimum(pos + j + 1, limit), draft_window or None,
+                )
+                d = sample_fn(logits, (emitted + j)[:, None]).astype(jnp.int32)
+                return (dpools, d), d[:, 0]
+
+            (pools, _), drafts = jax.lax.scan(
+                draft_body, (pools, tok), jnp.arange(k)
+            )
+            drafts = drafts.T  # (M, k)
+
+            # verify phase: one target forward over the k+1 positions
+            toks_v = jnp.concatenate([tok, drafts], axis=1)
+            wpos_v = pos[:, None] + offs[None, :]
+            ok_v = live[:, None] & (wpos_v < limit[:, None])
+            logits_v, pools = fwd(params, pools, toks_v, wpos_v, ok_v, None, None)
+            s = sample_fn(logits_v, emitted[:, None] + offs[None, :])
+            s = s.astype(jnp.int32)  # (M, k+1)
+
+            # acceptance: longest matched draft prefix, plus the bonus row
+            rem = max_steps - emitted
+            span = jnp.clip(jnp.minimum(k, rem - 1), 0, k)
+            match = (s[:, :k] == drafts) & (offs[None, :k] < span[:, None])
+            a = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+            e = a + 1
+            is_eos = (s == eos_ids[:, None]) & (offs[None, :] < e[:, None])
+            has_eos = jnp.any(is_eos, axis=1)
+            e = jnp.where(has_eos, jnp.argmax(is_eos, axis=1) + 1, e)
+            e = jnp.where(live, e, 0)
+
+            # emit + advance: accepted rows pack into `out` at the slot's
+            # running emission index; the last accepted sample becomes the
+            # next round's pending token
+            rows = jnp.where(
+                offs[None, :] < e[:, None],
+                emitted[:, None] + offs[None, :], out_cap,
+            )
+            out = out.at[rows, jnp.arange(m)[:, None]].set(s, mode="drop")
+            last = jnp.take_along_axis(s, jnp.clip(e - 1, 0, k)[:, None], axis=1)
+            tok = jnp.where(live[:, None], last, tok)
+            pos = pos + e
+            emitted = emitted + e
+            done = done | has_eos | (emitted >= max_steps)
+            return (pools, tok, pos, emitted, done, out), e
+
+        carry0 = (
+            cache, tokens0.astype(jnp.int32), p0,
+            jnp.zeros((m,), jnp.int32), ~active,
+            jnp.zeros((out_cap, m), jnp.int32),
+        )
+        (new_cache, _, _, _, _, out), e_rounds = jax.lax.scan(
+            round_body, carry0, None, length=rounds
+        )
+        return out, e_rounds, new_cache

@@ -44,7 +44,7 @@ _ACT_BYTES = 2  # bf16
 
 @dataclasses.dataclass
 class _Sample:
-    regime: str       # 'prefill' | 'prefill_chunk' | 'decode'
+    regime: str       # 'prefill' | 'prefill_chunk' | 'decode' | 'draft' | 'verify'
     codec: str        # 'w=<spec>,kv=<quant>' traffic-shape key
     raw_pred_s: float  # unscaled roofline prediction
     measured_s: float
@@ -71,7 +71,9 @@ class RoofLens:
 
     def bind(self, *, cfg, weight_bytes: int, kv_quant: Optional[str],
              m_slots: int, weight_spec: Optional[str] = None,
-             weight_elems: int = 0, n_chips: int = 1) -> None:
+             weight_elems: int = 0, n_chips: int = 1,
+             draft_weight_bytes: Optional[int] = None,
+             spec_k: int = 0, draft_window: int = 0) -> None:
         """Called by GenerationEngine: model geometry + weight-stream size.
 
         weight_bytes   stored bytes of the (possibly compressed) param tree
@@ -80,6 +82,11 @@ class RoofLens:
                        the decompression vector-op term (0 = dense weights)
         m_slots        decode batch rows: the fixed-shape scan computes all
                        of them every step, active or not
+        draft_weight_bytes / spec_k / draft_window
+                       speculative decode (DESIGN.md §16): the draft tree's
+                       stored bytes (its per-step weight read), draft depth,
+                       and the draft's attention-window cap (0 = full) —
+                       left at the defaults on a non-speculative engine
         """
         self.cfg = cfg
         self.weight_bytes = float(weight_bytes)
@@ -88,6 +95,11 @@ class RoofLens:
         self.weight_spec = weight_spec
         self.m_slots = m_slots
         self.n_chips = n_chips
+        self.draft_weight_bytes = (
+            float(draft_weight_bytes) if draft_weight_bytes else None
+        )
+        self.spec_k = spec_k
+        self.draft_window = draft_window
         self.codec_key = f"w={weight_spec or 'dense'},kv={kv_quant or 'none'}"
         self._attn_layers = [
             k for k in cfg.layer_kinds() if k in ("attn", "attn_local")
@@ -221,6 +233,67 @@ class RoofLens:
             vector_ops=per_step_vops, n_chips=self.n_chips,
         )
 
+    def _raw_draft(self, kv_lens: Sequence[float], k: int,
+                   rounds: int) -> float:
+        """Draft passes of a spec chunk: rounds * k fused S=1 steps whose
+        weight stream reads the *draft* codec's bytes (the whole point of
+        self-speculation — ~4x fewer bytes at a 4-bit draft) and whose KV
+        walk is capped at `draft_window` tokens when set."""
+        self._require_bound()
+        w = self.draft_weight_bytes or self.weight_bytes
+        span = float(k + 1)
+        mid = [kv + rounds * span / 2.0 for kv in kv_lens]
+        if self.draft_window:
+            mid = [min(kv, float(self.draft_window)) for kv in mid]
+        per_step_flops = (
+            self.m_slots * self._linear_flops_per_token
+            + sum(self._attn_flops(kv) for kv in mid)
+        )
+        kv_write = len(self._attn_layers) * self._kv_token_bytes()
+        per_step_bytes = (
+            w
+            + self.m_slots * self._act_bytes_per_token()
+            + sum(self._kv_read_bytes(kv) for kv in mid)
+            + len(kv_lens) * kv_write
+        )
+        per_step_vops = (
+            sum(self._kv_vops(kv) for kv in mid)
+            + (self.m_slots * self._w_vops / 512.0 if self._w_vops else 0.0)
+        )
+        return rounds * k * rs.surface_step_time(
+            self.profile, flops=per_step_flops, hbm_bytes=per_step_bytes,
+            vector_ops=per_step_vops, n_chips=self.n_chips,
+        )
+
+    def _raw_verify(self, kv_lens: Sequence[float], k: int,
+                    rounds: int) -> float:
+        """Verify passes of a spec chunk: one S=k+1 mini-prefill per round
+        at the *target* codec — prefill-chunk-shaped traffic (denser
+        matmuls, a bounded gather-read over each slot's written prefix)
+        amortizing one weight stream over k+1 positions."""
+        self._require_bound()
+        span = float(k + 1)
+        tokens = self.m_slots * span
+        mid = [kv + rounds * span / 2.0 for kv in kv_lens]
+        per_round_flops = (
+            tokens * self._linear_flops_per_token
+            + span * sum(self._attn_flops(kv + span) for kv in mid)
+        )
+        kv_write = len(self._attn_layers) * self._kv_token_bytes()
+        per_round_bytes = (
+            self.weight_bytes
+            + tokens * (self._act_bytes_per_token() + kv_write)
+            + sum(self._kv_read_bytes(kv + span) for kv in mid)
+        )
+        per_round_vops = (
+            (tokens / 512.0 * self._w_vops if self._w_vops else 0.0)
+            + sum(self._kv_vops(kv + span) for kv in mid)
+        )
+        return rounds * rs.surface_step_time(
+            self.profile, flops=per_round_flops, hbm_bytes=per_round_bytes,
+            vector_ops=per_round_vops, n_chips=self.n_chips,
+        )
+
     def predict_prefill(self, batch_rows: int, span: int) -> float:
         """Calibrated predicted wall seconds for one bucketed prefill."""
         return self._raw_prefill(batch_rows, span) * self.scale.get(
@@ -237,6 +310,20 @@ class RoofLens:
     def predict_decode(self, kv_lens: Sequence[float], steps: int = 1) -> float:
         """Calibrated predicted wall seconds for one decode chunk."""
         return self._raw_decode(kv_lens, steps) * self.scale.get("decode", 1.0)
+
+    def predict_draft(self, kv_lens: Sequence[float], k: int,
+                      rounds: int = 1) -> float:
+        """Calibrated predicted wall seconds for a spec chunk's draft passes."""
+        return self._raw_draft(kv_lens, k, rounds) * self.scale.get(
+            "draft", 1.0
+        )
+
+    def predict_verify(self, kv_lens: Sequence[float], k: int,
+                       rounds: int = 1) -> float:
+        """Calibrated predicted wall seconds for a spec chunk's verify passes."""
+        return self._raw_verify(kv_lens, k, rounds) * self.scale.get(
+            "verify", 1.0
+        )
 
     # -- measurement loop ---------------------------------------------------
 
@@ -256,6 +343,22 @@ class RoofLens:
     def observe_decode(self, kv_lens: Sequence[float], steps: int,
                        measured_s: float) -> None:
         self._record("decode", self._raw_decode(kv_lens, steps), measured_s)
+
+    def observe_spec(self, kv_lens: Sequence[float], k: int, rounds: int,
+                     measured_s: float) -> None:
+        """One speculative-decode chunk (DESIGN.md §16). The chunk is a
+        single jit launch, so draft and verify share one measured wall
+        time; it is attributed to the two regimes pro-rata to their raw
+        predictions — a modeling choice (the only one available without a
+        device profiler), which keeps both regimes' calibration fed from
+        real traffic while the *sum* stays an honest measurement."""
+        raw_d = self._raw_draft(kv_lens, k, rounds)
+        raw_v = self._raw_verify(kv_lens, k, rounds)
+        total = raw_d + raw_v
+        if total <= 0:
+            return
+        self._record("draft", raw_d, measured_s * raw_d / total)
+        self._record("verify", raw_v, measured_s * raw_v / total)
 
     def _record(self, regime: str, raw_pred: float, measured: float) -> None:
         self.samples.append(_Sample(regime, self.codec_key, raw_pred, measured))
@@ -287,7 +390,7 @@ class RoofLens:
         """Fit one measured/raw scale per regime (median — robust to the
         first-call compile outlier) and apply it to future predictions.
         Returns the fitted scales; regimes with no samples are untouched."""
-        for regime in ("prefill", "prefill_chunk", "decode"):
+        for regime in ("prefill", "prefill_chunk", "decode", "draft", "verify"):
             ratios = sorted(
                 s.measured_s / s.raw_pred_s
                 for s in self.samples

@@ -161,6 +161,71 @@ def make_paged_decode_chunk_step(model: Model) -> Callable:
     return chunk_step
 
 
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Self-speculative decoding knobs (DESIGN.md §16).
+
+    `k` draft tokens per verify; `draft_codec` names the codec-registry
+    format the engine re-encodes the weight tree at for the draft pass (no
+    second checkpoint — `make_draft_tree` requantizes the served weights);
+    `draft_window` > 0 caps the draft's attention window so its fused page
+    walk is O(window) instead of O(context) — verify always keeps the full
+    window, so acceptance (and therefore output) stays exact; `rounds`
+    draft/verify rounds run per device-resident chunk (default: enough to
+    cover the engine's `decode_chunk` at full acceptance)."""
+
+    k: int = 3
+    draft_codec: str = "nf4"
+    draft_window: int = 0
+    rounds: Optional[int] = None
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"spec_decode needs k >= 1, got {self.k}")
+        if self.draft_window < 0:
+            raise ValueError("draft_window must be >= 0 (0 = full window)")
+        if self.rounds is not None and self.rounds < 1:
+            raise ValueError("rounds must be >= 1")
+
+
+def make_paged_spec_decode_step(
+    model: Model, *, k: int, rounds: int, draft_window: int, block_size: int
+) -> Callable:
+    """Device-resident speculative decode (DESIGN.md §16): `rounds`
+    draft-k/verify-once rounds of `Model.spec_decode_chunk` per call. The
+    sampler closure keys every row on (request id, global output index)
+    through `sample_rows_keyed` — the same derivation as sequential decode,
+    which is what makes accepted tokens bit-identical — and hands the draft
+    the same stream so proposals agree with verify wherever the draft's
+    logits do."""
+
+    @functools.partial(jax.jit, static_argnames=("greedy",))
+    def spec_step(params, draft_params, cache, tokens0, tables, p0, fresh,
+                  rids, start_steps, max_steps, eos, active, temp, key, *,
+                  greedy):
+        def sample(logits, idx):
+            # logits (M, S, V); idx (M, S) chunk-local output indices
+            logits = logits.astype(jnp.float32)
+            if greedy:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            m, s_dim, v = logits.shape
+            steps = (start_steps[:, None] + idx.astype(jnp.uint32)).reshape(-1)
+            flat = sample_rows_keyed(
+                key, jnp.repeat(rids, s_dim), steps,
+                logits.reshape(m * s_dim, v), temp,
+            )
+            return flat.reshape(m, s_dim).astype(jnp.int32)
+
+        return model.spec_decode_chunk(
+            params, draft_params, tokens0, cache, tables, p0, fresh,
+            sample_fn=sample, max_steps=max_steps, eos_ids=eos,
+            active=active, k=k, rounds=rounds, block_size=block_size,
+            draft_window=draft_window,
+        )
+
+    return spec_step
+
+
 class GenerationEngine:
     """Continuous-batching generation over a block-paged KV cache.
 
@@ -214,6 +279,15 @@ class GenerationEngine:
     batch nor pays the engine-wide max gather width. `None` (default) keeps
     monolithic prefill.
 
+    `spec_decode` (DESIGN.md §16) turns on self-speculative decoding: the
+    engine re-encodes the served weight tree at `SpecConfig.draft_codec`
+    (no second checkpoint), drafts `k` tokens per round through the fused
+    paged walk at the draft codec's byte width, verifies all k+1 positions
+    in one target-codec forward, and rolls rejected KV back in the paged
+    pool. Greedy and keyed-temperature outputs are bit-identical to the
+    non-speculative engine; only throughput changes. Requires the paged
+    path.
+
     `obs` installs a `repro.obs.Observability` bundle (DESIGN.md §14):
     request-lifecycle tracing (TTFT/ITL, Chrome trace export), the metrics
     registry, and the RoofLens predicted-vs-measured loop — the engine
@@ -243,6 +317,8 @@ class GenerationEngine:
         prefix_cache: bool = False,
         prefill_chunk: Optional[int] = None,
         obs=None,
+        spec_decode: Optional[SpecConfig] = None,
+        prefill_sla_s: Optional[float] = None,
     ):
         if kv_quant is not None and kv_quant != model.cfg.kv_quant:
             # end-to-end kv_quant plumbing: the format name is a codec-
@@ -255,10 +331,27 @@ class GenerationEngine:
         self.cfg = model.cfg
         self.mesh = mesh
         self.fsdp = fsdp
+        self.spec = spec_decode
+        draft_params = None
+        if spec_decode is not None:
+            # self-speculation: the draft is the SAME weight tree re-encoded
+            # at a cheaper codec, built from the raw params so the sharder
+            # below places both trees with one rule
+            from repro.core.decompress import make_draft_tree
+            from repro.core.formats import get_spec
+
+            draft_params = make_draft_tree(
+                params, get_spec(spec_decode.draft_codec)
+            )
         if mesh is not None:
             ctx = sh.ShardingCtx(mesh, fsdp=fsdp, mode="serve")
             params = sh.shard_params(params, ctx, scan_stacked=model.uniform)
+            if draft_params is not None:
+                draft_params = sh.shard_params(
+                    draft_params, ctx, scan_stacked=model.uniform
+                )
         self.params = params
+        self.draft_params = draft_params
         self.max_len = max_len
         self.temperature = temperature
         self._base_key = jax.random.PRNGKey(seed)
@@ -273,6 +366,8 @@ class GenerationEngine:
         if paged == "auto":
             paged = attn_only
         self.paged = bool(paged)
+        if spec_decode is not None and not self.paged:
+            raise ValueError("spec_decode requires the paged engine")
         self.scheduler: Optional[Scheduler] = None
         if self.paged:
             self.block_size = block_size
@@ -298,6 +393,17 @@ class GenerationEngine:
             self._paged_decode = jax.jit(make_paged_decode_step(model))
             self._paged_decode_chunk = make_paged_decode_chunk_step(model)
             self._paged_scrub = jax.jit(model.paged_scrub)
+            self.spec_rounds = 0
+            self._paged_spec_chunk = None
+            if spec_decode is not None:
+                self.spec_rounds = spec_decode.rounds or max(
+                    1, -(-max(1, decode_chunk) // (spec_decode.k + 1))
+                )
+                self._paged_spec_chunk = make_paged_spec_decode_step(
+                    model, k=spec_decode.k, rounds=self.spec_rounds,
+                    draft_window=spec_decode.draft_window,
+                    block_size=block_size,
+                )
             # window-aware page freeing is sound only when *every* layer's
             # attention is local: one global layer keeps the full history
             # live (the pool is shared across layers)
@@ -318,6 +424,15 @@ class GenerationEngine:
                     self.cfg.window if all_local and self.cfg.window > 0 else None
                 ),
                 obs=obs,
+                spec_fn=(
+                    self._run_paged_spec_chunk if spec_decode is not None else None
+                ),
+                spec_k=spec_decode.k if spec_decode is not None else 0,
+                spec_rounds=self.spec_rounds,
+                spec_window=(
+                    spec_decode.draft_window if spec_decode is not None else 0
+                ),
+                prefill_sla_s=prefill_sla_s,
             )
 
     def _mesh_scope(self):
@@ -338,6 +453,15 @@ class GenerationEngine:
             self.params, is_leaf=lambda x: isinstance(x, CompressedTensor)
         )
         compressed = [l for l in leaves if isinstance(l, CompressedTensor)]
+        draft_bytes = None
+        if self.draft_params is not None:
+            draft_bytes = sum(
+                int(l.nbytes)
+                for l in jax.tree_util.tree_leaves(
+                    self.draft_params,
+                    is_leaf=lambda x: isinstance(x, CompressedTensor),
+                )
+            )
         lens.bind(
             cfg=self.cfg,
             weight_bytes=sum(int(l.nbytes) for l in leaves),
@@ -348,6 +472,9 @@ class GenerationEngine:
             kv_quant=self.kv_quant,
             m_slots=max_slots,
             n_chips=self.mesh.size if self.mesh is not None else 1,
+            draft_weight_bytes=draft_bytes,
+            spec_k=self.spec.k if self.spec is not None else 0,
+            draft_window=self.spec.draft_window if self.spec is not None else 0,
         )
 
     # ------------------------------------------------------------------
@@ -452,6 +579,33 @@ class GenerationEngine:
                 greedy=self.temperature <= 0.0,
             )
         return np.asarray(toks)
+
+    def _run_paged_spec_chunk(
+        self, tokens0, tables, p0, fresh, rids, start_steps, max_steps, eos,
+        active,
+    ):
+        """One device-resident spec chunk: `spec_rounds` draft/verify rounds;
+        only the packed emitted tokens and per-round emission counts cross
+        back to host."""
+        with self._mesh_scope():
+            out, e_rounds, self.kv.pools = self._paged_spec_chunk(
+                self.params,
+                self.draft_params,
+                self.kv.pools,
+                jnp.asarray(tokens0),
+                jnp.asarray(tables),
+                jnp.asarray(p0, jnp.int32),
+                jnp.asarray(fresh, jnp.int32),
+                jnp.asarray(rids, jnp.uint32),
+                jnp.asarray(start_steps, jnp.uint32),
+                jnp.asarray(max_steps, jnp.int32),
+                jnp.asarray(eos, jnp.int32),
+                jnp.asarray(active),
+                jnp.float32(self.temperature),
+                self._base_key,
+                greedy=self.temperature <= 0.0,
+            )
+        return np.asarray(out), np.asarray(e_rounds)
 
     def submit(
         self,

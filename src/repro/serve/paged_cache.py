@@ -413,6 +413,41 @@ class PagedKVCache:
             return len(self.allocator.free(dead))
         return 0
 
+    def rollback(self, rid: int, n_keep: int) -> int:
+        """Speculative-decode rollback (DESIGN.md §16): shrink the request
+        back to the pages covering its first `n_keep` tokens.
+
+        Rejected draft tokens rewind *in place* — their positions are
+        simply rewritten next round, under the staleness invariant that a
+        stale entry's position always exceeds every query position until
+        overwritten — so within a page this method has nothing to do. Whole
+        trailing pages past `blocks_for(n_keep)` (draft overhang that
+        crossed a page boundary, or an EOS that landed mid-chunk) are
+        dropped here: each removed table entry releases one reference (a
+        page shared with the prefix index or a sibling survives for its
+        other holders) and credits one page back to the request's admission
+        reservation, since a later write at those positions re-allocates
+        lazily. On the spec-decode path every removed page is a private
+        fresh allocation from this round, so the credited reservation stays
+        backed by genuinely freed pages. Returns pages returned to the free
+        list."""
+        table = self._tables[rid]
+        keep = self.blocks_for(max(0, n_keep))
+        if len(table) <= keep:
+            return 0
+        tail = [p for p in table[keep:] if p is not None]
+        removed = len(table) - keep
+        del table[keep:]
+        self._reserved[rid] = self._reserved.get(rid, 0) + removed
+        freed = self.allocator.free(tail)
+        if freed and self._fresh:
+            # a freed page may still sit in the un-drained fresh list from
+            # this round's allocation burst; a recycled tenant would
+            # re-scrub it anyway, but don't scrub pages we no longer hold
+            drop = {p + 1 for p in freed}
+            self._fresh = [d for d in self._fresh if d not in drop]
+        return len(freed)
+
     # -- slot / table arrays for the jitted steps ----------------------------
 
     def _alloc_page(self, rid: int, *, fresh: bool) -> int:

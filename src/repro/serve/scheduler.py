@@ -82,6 +82,10 @@ STAT_UNITS: Dict[str, str] = {
     "kv_bytes_per_token": "bytes (pool footprint per token slot, all layers)",
     "kv_read_bytes_per_token": "bytes (KV actually streamed per decoded token)",
     "kv_read_bytes_per_token_worst": "bytes (max_blocks gather per token)",
+    "draft_tokens": "tokens (draft proposals computed on the speculative path)",
+    "verify_calls": "calls (per-slot verify passes on the speculative path)",
+    "accepted_tokens_per_step": "tokens/call (tokens emitted per verify pass; "
+                                ">1 is the speculative-decode win)",
 }
 
 
@@ -146,6 +150,15 @@ class Scheduler:
     when one round recycles more pages than the launch's fixed
     fresh-vector width (satellite of the same fix: `drain_fresh` used to
     hard-fail mid-admission with pages already allocated).
+
+    `spec_fn` (DESIGN.md §16) replaces the decode chunk with speculative
+    rounds: spec_fn(tokens0 (M,1), tables (M,TW), p0 (M,), fresh (F,),
+    rids, start_steps, max_steps, eos, active) -> (out (cap, M) packed
+    emissions, e_rounds (rounds, M)); `spec_k`/`spec_rounds`/`spec_window`
+    mirror the engine's SpecConfig for accounting. `prefill_sla_s` plus an
+    installed RoofLens switches the chunked-prefill span from the fixed
+    `prefill_chunk` to the largest predicted-to-fit ladder step (see
+    `_prefill_span_cap`).
     """
 
     def __init__(
@@ -164,6 +177,11 @@ class Scheduler:
         prefill_chunk: Optional[int] = None,
         scrub_fn: Optional[Callable] = None,
         obs=None,
+        spec_fn: Optional[Callable] = None,
+        spec_k: int = 0,
+        spec_rounds: int = 0,
+        spec_window: int = 0,
+        prefill_sla_s: Optional[float] = None,
     ):
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
@@ -173,6 +191,11 @@ class Scheduler:
             raise ValueError(f"local_window must be >= 1, got {local_window}")
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if spec_fn is not None and (spec_k < 1 or spec_rounds < 1):
+            raise ValueError(
+                f"spec_fn requires spec_k >= 1 and spec_rounds >= 1, got "
+                f"k={spec_k}, rounds={spec_rounds}"
+            )
         self.cache = cache
         self.max_slots = max_slots
         self.max_len = max_len
@@ -186,6 +209,11 @@ class Scheduler:
         self.local_window = local_window
         self.prefill_chunk = prefill_chunk
         self._scrub = scrub_fn
+        self._spec = spec_fn
+        self.spec_k = spec_k
+        self.spec_rounds = spec_rounds
+        self.spec_window = spec_window
+        self.prefill_sla_s = prefill_sla_s
         self.queue: collections.deque = collections.deque()
         self.slots: List[Optional[Request]] = [None] * max_slots
         self.results: Dict[int, np.ndarray] = {}
@@ -199,6 +227,7 @@ class Scheduler:
             "prefill_calls": 0, "prefill_chunk_calls": 0,
             "prefill_token_steps": 0, "prefill_real_tokens": 0,
             "kv_pages_read": 0, "kv_pages_read_worst": 0, "window_freed_pages": 0,
+            "draft_tokens": 0, "verify_calls": 0,
         }
         # observability (DESIGN.md §14): every site below is guarded on the
         # specific collector it feeds — with obs=None the serving loop does
@@ -327,9 +356,10 @@ class Scheduler:
         ]
         if not pending:
             return
+        span_cap = self._prefill_span_cap(pending)
         rows = [
             (i, r, r.prefilled,
-             min(self.prefill_chunk, len(r.prompt) - r.prefilled))
+             min(span_cap, len(r.prompt) - r.prefilled))
             for i, r in pending
         ]
         self._prefill_rows(rows, bounded=True)
@@ -337,6 +367,40 @@ class Scheduler:
             if r.out and self._finished(r):
                 self._evict(i)
         self._free_window_pages()
+
+    def _prefill_span_cap(self, pending) -> int:
+        """Tokens one chunked-prefill launch may process per request. The
+        fixed `prefill_chunk` unless an SLA budget *and* a bound RoofLens
+        are installed — then the cap is the largest page-aligned pow2
+        ladder step whose *predicted* launch time fits `prefill_sla_s`
+        (DESIGN.md §14: the calibrated predicted-vs-measured loop put to
+        work). A long-context round, whose gather term grows with the
+        written prefix, then automatically takes smaller bites than a cold
+        one — constant predicted stall on the interleaved decode stream
+        instead of constant token count. Never returns less than one page
+        (progress must be possible even over budget)."""
+        if (
+            self.prefill_sla_s is None
+            or self._obs_rooflens is None
+            or not getattr(self._obs_rooflens, "_bound", False)
+        ):
+            return self.prefill_chunk
+        bs = self.cache.block_size
+        rows = len(pending)
+        best = min(bs, self.prefill_chunk)
+        n = bs
+        while n <= self.prefill_chunk:
+            table = max(
+                math.ceil(min(r.prefilled + n, len(r.prompt)) / bs)
+                for _, r in pending
+            ) * bs
+            if self._obs_rooflens.predict_prefill_chunk(
+                rows, n, table
+            ) > self.prefill_sla_s:
+                break
+            best = n
+            n *= 2
+        return best
 
     def _prefill_rows(
         self, rows: List[tuple], bucketed: bool = True, bounded: bool = False
@@ -480,7 +544,9 @@ class Scheduler:
         # the prefill launch that caused them drains them — decode writing
         # a shared page would mean the plan in PagedKVCache._plan is wrong
         assert self.cache.pending_copies == 0, "unflushed CoW copies at decode"
-        if self.chunk > 1:
+        if self._spec is not None:
+            self._decode_active_spec(active)
+        elif self.chunk > 1:
             self._decode_active_chunked(active)
         else:
             self._decode_active_single(active)
@@ -617,6 +683,181 @@ class Scheduler:
             if self._finished(r):
                 self._evict(i)
         self._free_window_pages()
+
+    def _decode_active_spec(self, active) -> None:
+        """Speculative decode round (DESIGN.md §16): `spec_rounds`
+        draft-k/verify-once rounds run device-resident in one launch. The
+        host pre-allocates each slot's worst-case accepted span (every
+        round fully accepted), hands the device a length-bounded block
+        table, and afterwards replays the packed emissions against request
+        state and rolls the paged pool back to the committed length —
+        whole pages the chunk reserved but rejection left unwritten go
+        back to the allocator."""
+        m, bs = self.max_slots, self.cache.block_size
+        k, rounds = self.spec_k, self.spec_rounds
+        cap = rounds * (k + 1)
+        rem = {i: r.max_new_tokens - len(r.out) for i, r in active}
+
+        used0 = self.cache.allocator.used_count
+        held0 = {i: self.cache.blocks_held(r.rid) for i, r in active}
+        p0s: Dict[int, int] = {}
+        sis: Dict[int, int] = {}
+
+        tokens0 = np.zeros((m, 1), np.int32)
+        p0 = np.zeros(m, np.int32)
+        rids = np.full(m, -1, np.int64)
+        start_steps = np.zeros(m, np.int64)
+        max_steps = np.zeros(m, np.int32)
+        eos = np.full(m, -1, np.int32)
+        act = np.zeros(m, bool)
+        for i, r in active:
+            pos0 = p0s[i] = r.next_pos - 1
+            si = sis[i] = min(cap, rem[i])
+            tokens0[i, 0] = r.out[-1]
+            p0[i] = pos0
+            rids[i] = r.rid
+            start_steps[i] = len(r.out)
+            max_steps[i] = si
+            act[i] = True
+            if r.eos_id is not None:
+                eos[i] = r.eos_id
+            # pre-allocate the full-acceptance span; the device computes
+            # write slots from the table, and rollback below returns
+            # whatever rejection left unwritten
+            self.cache.write_slots(r.rid, pos0, si)
+        # the bounded-table trick (PR 5/PR 7): width covers the furthest
+        # slot's span, pow2-rounded — it serves both the draft's fused walk
+        # and the verify gather, so neither pays max_blocks
+        tw = min(
+            _pow2ceil(max(
+                math.ceil((p0s[i] + sis[i]) / bs) for i, _ in active
+            )),
+            self.max_blocks,
+        )
+        tables = np.zeros((m, tw), np.int32)
+        for i, r in active:
+            tables[i] = self.cache.block_table_row(r.rid, tw)
+        fresh = self.cache.drain_fresh(m * ((cap + bs - 1) // bs + 1))
+
+        observing = (
+            self._obs_tracer is not None or self._obs_rooflens is not None
+            or self._obs_metrics is not None
+        )
+        t0 = self._obs_clock() if observing else 0.0
+        out, e_rounds = self._spec(
+            tokens0, tables, p0, fresh, rids, start_steps, max_steps, eos,
+            act,
+        )  # out (cap, m) packed emissions, e_rounds (rounds, m)
+        t1 = self._obs_clock() if observing else 0.0
+
+        steps_taken: Dict[int, int] = {}
+        for i, r in active:
+            emitted = 0
+            for t in range(rounds):
+                for _ in range(int(e_rounds[t, i])):
+                    r.out.append(int(out[emitted, i]))
+                    emitted += 1
+            steps_taken[i] = emitted
+            r.peak_blocks = max(r.peak_blocks, self.cache.blocks_held(r.rid))
+            # rewind to the committed length: positions >= next_pos - 1
+            # hold only rejected-draft junk (the pending token's KV is
+            # written next round), so their whole pages are dead weight
+            self.cache.rollback(r.rid, r.next_pos - 1)
+
+        self._account_decode_spec(active, e_rounds, p0s, held0, used0, tw)
+        kept = {r.rid: steps_taken[i] for i, r in active}
+        live_rounds = int(np.sum(np.any(np.asarray(e_rounds) > 0, axis=1)))
+        if self._obs_tracer is not None:
+            self._obs_tracer.on_decode_chunk(t0, t1, live_rounds, kept)
+        if self._obs_rooflens is not None:
+            self._obs_rooflens.observe_spec(
+                [p0s[i] + 1 for i, _ in active], k, max(1, live_rounds),
+                t1 - t0,
+            )
+        if self._obs_metrics is not None:
+            mreg = self._obs_metrics
+            mreg.histogram("serve.decode.chunk_wall_s", unit="s").record(t1 - t0)
+            mreg.counter("serve.host_syncs", unit="calls").inc()
+            mreg.counter("serve.decode.tokens", unit="tokens").inc(
+                sum(kept.values())
+            )
+            self._publish_gauges()
+
+        for i, r in active:
+            if self._finished(r):
+                self._evict(i)
+        self._free_window_pages()
+
+    def _account_decode_spec(
+        self,
+        active,
+        e_rounds: np.ndarray,
+        p0s: Dict[int, int],
+        held0: Dict[int, int],
+        used0: int,
+        tw: int,
+    ) -> None:
+        """Replay the spec chunk's per-round charging. One round counts as
+        one decode step (it is one draft+verify iteration of the batch), so
+        `mean_occupancy` reads as emitted tokens per slot-round — above 1.0
+        exactly when speculation is paying off. Page charging mirrors
+        `_account_decode_chunk` over *committed* tokens only: pages the
+        chunk pre-allocated but rollback reclaimed never existed as far as
+        the occupancy stats are concerned.
+
+        KV read traffic per live slot-round: k fused draft walks (window-
+        capped when a draft window is set) plus one verify gather over the
+        bounded table width `tw`; with the fused path routed off both
+        passes gather `tw` pages."""
+        st = self._stats
+        st["decode_chunks"] += 1
+        st["host_syncs"] += 1
+        bs = self.cache.block_size
+        k = self.spec_k
+        fused = kernel_ops.PAGED_ATTENTION_FUSED
+        wins = [
+            w for w in (self.spec_window or None, self.local_window)
+            if w is not None
+        ]
+        window = min(wins) if wins else None
+        used = used0
+        grown = dict.fromkeys(held0, 0)
+        pos = dict(p0s)
+        cum = dict.fromkeys(held0, 0)
+        total = {i: int(np.sum(e_rounds[:, i])) for i, _ in active}
+        for t in range(e_rounds.shape[0]):
+            live = [i for i, _ in active if int(e_rounds[t, i]) > 0]
+            if not live:
+                break
+            st["decode_steps"] += 1
+            st["verify_calls"] += len(live)
+            st["draft_tokens"] += k * len(live)
+            for i in live:
+                e = int(e_rounds[t, i])
+                for j in range(e):
+                    if (pos[i] + j) % bs == 0:
+                        used += 1
+                        grown[i] += 1
+                # draft walks at kv_len = pos+j+1, j in [0, k)
+                for j in range(k):
+                    kv = pos[i] + j + 1
+                    if fused:
+                        first = max(0, kv - window) // bs if window else 0
+                        st["kv_pages_read"] += min(tw, -(-kv // bs)) - first
+                    else:
+                        st["kv_pages_read"] += tw
+                # one verify gather over the bounded table
+                st["kv_pages_read"] += tw
+                st["kv_pages_read_worst"] += e * self.max_blocks
+                st["active_slot_steps"] += e
+                pos[i] += e
+                cum[i] += e
+            st["paged_block_steps"] += used
+            st["dense_block_steps"] += len(live) * self.max_blocks
+            st["peak_blocks"] = max(st["peak_blocks"], used)
+            for i, r in active:
+                if i in live and cum[i] == total[i] and self._finished(r):
+                    used -= held0[i] + grown[i]
 
     def _account_decode_chunk(
         self,
@@ -828,6 +1069,13 @@ class Scheduler:
         # prefix-sharing observables (DESIGN.md §15): hit tokens and CoW
         # clones are lifetime counters the cache owns; shared/cached pages
         # are point-in-time occupancy (0 on an idle pool without an index)
+        # speculative decode (DESIGN.md §16): tokens emitted per verify
+        # pass. On a spec engine every decoded token flows through verify,
+        # so the ratio is exact; without speculation it reads 0.0
+        st["accepted_tokens_per_step"] = (
+            st["active_slot_steps"] / st["verify_calls"]
+            if st["verify_calls"] else 0.0
+        )
         occ = self.cache.occupancy()
         st["prefix_hit_tokens"] = self.cache.prefix_hit_tokens
         st["cow_copies"] = self.cache.cow_copies

@@ -31,17 +31,42 @@ def make_train_step(
     *,
     n_microbatches: int = 1,
     remat: bool = True,
+    grad_compression: Optional[str] = None,
+    mesh=None,
+    compression_group: int = 128,
 ) -> Callable:
     """Returns train_step(params, opt_state, batch, step) ->
-    (params, opt_state, metrics)."""
+    (params, opt_state, metrics).
+
+    With `grad_compression` set (any KV-capable codec name — 'int8'/'bf8'
+    canonically) the step instead has the error-feedback signature
+    train_step(params, opt_state, batch, step, err) ->
+    (params, opt_state, metrics, err): gradients pass through the
+    dist/grad_compression quantized all-reduce over `mesh`, and the local
+    quantization residual threads through as `err` so the transmitted
+    sequence telescopes across steps (see that module's docstring —
+    dropping the residual is exactly the bias error feedback exists to
+    fix, and was the ROADMAP bug: the state never made it around the
+    loop)."""
     optimizer = optimizer or build_optimizer(model.cfg)
+    allreduce = None
+    if grad_compression is not None:
+        if mesh is None:
+            raise ValueError(
+                "grad_compression needs the mesh that carries the reduction"
+            )
+        from repro.dist.grad_compression import make_compressed_allreduce
+
+        allreduce, _ = make_compressed_allreduce(
+            mesh, None, method=grad_compression, group=compression_group
+        )
 
     def loss_fn(params, batch):
         return model.loss(params, batch, remat=remat)
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
-    def train_step(params, opt_state, batch, step):
+    def train_step(params, opt_state, batch, step, err=None):
         if n_microbatches == 1:
             (loss, metrics), grads = grad_fn(params, batch)
         else:
@@ -71,8 +96,12 @@ def make_train_step(
             loss = loss / n_microbatches
             metrics = {"ce": loss, "aux": jnp.zeros(()), "z_loss": jnp.zeros(())}
 
+        if allreduce is not None:
+            grads, new_err = allreduce(grads, err)
         new_params, new_opt_state = optimizer.update(grads, opt_state, params, step)
         metrics = dict(metrics, loss=loss)
+        if allreduce is not None:
+            return new_params, new_opt_state, metrics, new_err
         return new_params, new_opt_state, metrics
 
     return train_step
@@ -91,17 +120,48 @@ def train_loop(
     checkpoint_every: int = 0,
     step_timeout_s: float = 0.0,
     on_step=None,
+    grad_compression: Optional[str] = None,
+    mesh=None,
+    compression_group: int = 128,
 ):
     """Host-side loop: data feed, metrics, periodic checkpoints, straggler
-    timeout hook (fault.py wraps this for restart/elastic semantics)."""
+    timeout hook (fault.py wraps this for restart/elastic semantics).
+
+    With `grad_compression` set the loop owns the error-feedback state:
+    a params-shaped f32 zero tree seeds it, and each step's residual is
+    threaded into the next (the step itself stays functional)."""
     import time
 
-    step_fn = train_step or jax.jit(make_train_step(model), donate_argnums=(0, 1))
+    compressed = grad_compression is not None
+    if train_step is not None:
+        step_fn = train_step
+    elif compressed:
+        step_fn = jax.jit(
+            make_train_step(
+                model,
+                grad_compression=grad_compression,
+                mesh=mesh,
+                compression_group=compression_group,
+            ),
+            donate_argnums=(0, 1, 4),
+        )
+    else:
+        step_fn = jax.jit(make_train_step(model), donate_argnums=(0, 1))
+    err = (
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if compressed
+        else None
+    )
     history = []
     for step in range(start_step, start_step + n_steps):
         t0 = time.monotonic()
         batch = {k: jnp.asarray(v) for k, v in pipeline.batch(step).items()}
-        params, opt_state, metrics = step_fn(params, opt_state, batch, step)
+        if compressed:
+            params, opt_state, metrics, err = step_fn(
+                params, opt_state, batch, step, err
+            )
+        else:
+            params, opt_state, metrics = step_fn(params, opt_state, batch, step)
         metrics = {k: float(v) for k, v in metrics.items()}
         dt = time.monotonic() - t0
         if step_timeout_s and dt > step_timeout_s:

@@ -395,6 +395,132 @@ def test_prefix_sharing_conserves_pool_and_refcounts(
     assert occ["used"] == occ["cached"] == cache.prefix.pages
 
 
+# op stream for the speculative-decode battery (PR 8): admit one of a
+# family of overlapping prompts, append (prefill writes, then the spec
+# round's preallocating write_slots), rollback (rejected drafts rewind the
+# request to its committed length), or evict — so rollback runs against
+# tables that also hold prefix-shared and CoW-cloned pages
+_ROPS = st.lists(
+    st.tuples(st.sampled_from(["admit", "append", "rollback", "evict"]),
+              st.integers(0, 7), st.integers(1, 9)),
+    min_size=1, max_size=60,
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(ops=_ROPS, num_blocks=st.integers(8, 24), block_size=st.integers(1, 6))
+def test_spec_rollback_conserves_pool_and_refcounts(ops, num_blocks, block_size):
+    """Speculative-decode rollback conservation: random accept/reject
+    sequences (modeled as append-then-rollback, as the scheduler's spec
+    round preallocates the draft span and rewinds rejects) keep free +
+    unique-allocated equal to the pool size and every page's refcount equal
+    to its live-table holders plus index references — including when the
+    rolled-back request's table holds prefix-shared pages and CoW clones.
+    Rollback only ever trims decode-tail pages (the scheduler never rewinds
+    below the prompt), credits the admission reservation so the request can
+    re-grow, and never disturbs sibling or index references."""
+    bs = block_size
+    cache = PagedKVCache(
+        _PoolStub(), num_blocks=num_blocks, block_size=bs, prefix_cache=True
+    )
+    base = list(range(1, 2 * bs + 1))
+    prompts = [
+        base,
+        base + list(range(100, 100 + bs + 1)),
+        list(range(300, 300 + 2 * bs + 1)),
+    ]
+    live = {}  # rid -> [prompt, kv_len budget, tokens written, inserted]
+    next_rid = 0
+    for kind, pick, n in ops:
+        if kind == "admit":
+            prompt = prompts[pick % len(prompts)]
+            kv_len = len(prompt) + n
+            if cache.can_admit(kv_len, prompt):
+                hit = cache.admit(next_rid, kv_len, prompt=prompt)
+                live[next_rid] = [prompt, kv_len, hit, False]
+                next_rid += 1
+        elif kind == "append" and live:
+            rid = sorted(live)[pick % len(live)]
+            prompt, kv_len, written, inserted = live[rid]
+            take = min(n, kv_len - written)
+            if take > 0:
+                slots = cache.write_slots(rid, written, take)
+                for s in slots.tolist():
+                    # CoW contract survives the spec path: a write never
+                    # lands on a shared page
+                    assert cache.allocator.ref_count(s // bs - 1) == 1
+                live[rid][2] = written + take
+            if not inserted and live[rid][2] >= len(prompt):
+                cache.prefix_insert(rid, prompt)
+                live[rid][3] = True
+        elif kind == "rollback" and live:
+            rid = sorted(live)[pick % len(live)]
+            prompt, _, written, _ = live[rid]
+            if written > len(prompt):
+                keep = max(len(prompt), written - n)
+                before = len(cache._tables[rid])
+                freed_before = cache.allocator.free_count
+                cache.rollback(rid, keep)
+                keep_pages = min(before, cache.blocks_for(keep))
+                assert len(cache._tables[rid]) == keep_pages
+                # every trimmed page was a private decode page -> freed
+                assert (cache.allocator.free_count
+                        == freed_before + before - keep_pages)
+                live[rid][2] = keep
+        elif kind == "evict" and live:
+            rid = sorted(live)[pick % len(live)]
+            cache.release(rid)
+            del live[rid]
+        cache.drain_copies(max(1, cache.pending_copies))
+        cache.drain_fresh_rows(num_blocks)
+
+        # conservation: free + unique allocated pages == pool size
+        alloc = cache.allocator
+        assert alloc.free_count + alloc.used_count == num_blocks
+        # exact refcounts: holders are live tables + index references
+        holders = {}
+        for rid in live:
+            for p in cache._tables[rid]:
+                if p is not None:
+                    holders[p] = holders.get(p, 0) + 1
+        for p in _index_page_multiset(cache.prefix):
+            holders[p] = holders.get(p, 0) + 1
+        assert alloc.used_count == len(holders)
+        for p, c in holders.items():
+            assert alloc.ref_count(p) == c
+        assert cache.reserved_blocks <= alloc.free_count
+
+    for rid in list(live):
+        cache.release(rid)
+    occ = cache.occupancy()
+    assert occ["used"] == occ["cached"] == cache.prefix.pages
+
+
+def test_rollback_trims_tail_credits_reservation_and_regrows():
+    """Unit rollback semantics: whole trailing pages drop, within-page
+    rejects are a no-op, the reservation credit lets the request re-grow to
+    its admitted budget, and freed pages leave the un-drained fresh list."""
+    cache = PagedKVCache(_PoolStub(), num_blocks=8, block_size=2)
+    cache.admit(0, 12)
+    cache.write_slots(0, 0, 9)  # pages 0..4, reservation 6 -> 1
+    assert cache.blocks_held(0) == 5 and cache._reserved[0] == 1
+    fresh0 = list(cache._fresh)
+    # within-page rewind: position 8 rejected, page 4 still covers pos 8
+    assert cache.rollback(0, 8) == 1  # page 4 held only token 8
+    assert cache.blocks_held(0) == 4 and cache._reserved[0] == 2
+    # the freed page must not be scrubbed by this round's step anymore
+    assert len(cache._fresh) == len(fresh0) - 1
+    assert cache.rollback(0, 7) == 0  # pos 7 is mid-page 3: nothing to trim
+    assert cache.blocks_held(0) == 4
+    assert cache.rollback(0, 3) == 2  # pages 2,3 drop
+    assert cache.blocks_held(0) == 2 and cache._reserved[0] == 4
+    # re-grow to the full admitted budget: credits make it exactly possible
+    cache.write_slots(0, 3, 9)
+    assert cache.blocks_held(0) == 6 and cache._reserved[0] == 0
+    cache.release(0)
+    assert cache.allocator.free_count == 8
+
+
 @settings(max_examples=50, deadline=None)
 @given(
     block_size=st.integers(1, 6),

@@ -1,0 +1,331 @@
+"""Self-speculative decoding battery (DESIGN.md §16): the low-bit draft /
+batched-verify loop must be *bit-identical* to plain autoregressive
+decoding — greedy and keyed-temperature, across KV codecs, with the prefix
+cache on, with a draft attention window, and under a sharded mesh — while
+the paged pool's rollback bookkeeping stays conserved and the scheduler
+reports an acceptance rate above one token per verify."""
+import math
+import types
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_smoke_config
+from repro.models.model import Model
+from repro.serve.engine import GenerationEngine, SpecConfig
+from repro.serve.paged_cache import PagedKVCache
+
+MIXED_LENGTHS = (4, 19, 11)
+
+
+def _prompts(vocab, lengths=MIXED_LENGTHS, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, n).astype(np.int32) for n in lengths]
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = get_smoke_config("llama3-8b")
+    m = Model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _drain(m, params, prompts, n_steps, **kw):
+    eng = GenerationEngine(
+        m, params, max_len=64, paged=True, block_size=8, max_slots=2,
+        decode_chunk=8, **kw,
+    )
+    rids = [eng.submit(p, max_new_tokens=n_steps) for p in prompts]
+    done = eng.run_until_drained()
+    return [done[r] for r in rids], eng
+
+
+class _PoolStub:
+    class cfg:
+        kv_quant = "none"
+
+    def init_paged_cache(self, num_blocks, block_size, dtype=jnp.bfloat16,
+                         kv_quant=None):
+        return {}
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: spec decode must change throughput, never tokens
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_quant", ["none", "bf8", "int8", "nf4"])
+def test_spec_greedy_bit_identical_across_kv_codecs(llama, kv_quant):
+    """Greedy speculative decoding equals plain paged decoding token-for-
+    token for every KV codec — acceptance is an exact prefix match against
+    the target forward, so the draft codec can only affect speed."""
+    m, params = llama
+    prompts = _prompts(m.cfg.vocab_size)
+    want, _ = _drain(m, params, prompts, 12, kv_quant=kv_quant)
+    got, eng = _drain(
+        m, params, prompts, 12, kv_quant=kv_quant,
+        spec_decode=SpecConfig(k=3, draft_codec="nf4"),
+    )
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+    st = eng.scheduler.stats()
+    assert st["draft_tokens"] > 0 and st["verify_calls"] > 0
+    assert st["accepted_tokens_per_step"] >= 1.0
+
+
+def test_spec_temperature_bit_identical(llama):
+    """The verify pass samples from the same per-(request, token-index)
+    fold_in key stream the sequential sampler uses, so temperature
+    sampling is bit-identical too — acceptance compares the draft against
+    the keyed sample, not against an argmax."""
+    m, params = llama
+    prompts = _prompts(m.cfg.vocab_size)
+    want, _ = _drain(m, params, prompts, 10, temperature=0.8, seed=7)
+    got, _ = _drain(
+        m, params, prompts, 10, temperature=0.8, seed=7,
+        spec_decode=SpecConfig(k=2, draft_codec="bf8"),
+    )
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+
+
+def test_spec_with_prefix_cache_and_eos(llama):
+    """Spec decode composes with prefix sharing (rollback decrefs, never
+    frees, shared pages) and honors per-request EOS mid-round: the round's
+    acceptance is clamped at the first EOS position."""
+    m, params = llama
+    base = _prompts(m.cfg.vocab_size, (17,), seed=3)[0]
+    prompts = [base, np.concatenate([base, base[:5]])]
+    want, eng0 = _drain(m, params, prompts, 10, prefix_cache=True)
+    eos = int(want[0][4])  # force an EOS the sequential path hits mid-run
+    cfg = SpecConfig(k=3, draft_codec="nf4")
+    got, eng = _drain(
+        m, params, prompts, 10, prefix_cache=True, spec_decode=cfg,
+    )
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+
+    def drain_eos(spec):
+        e = GenerationEngine(
+            m, params, max_len=64, paged=True, block_size=8, max_slots=2,
+            decode_chunk=8, prefix_cache=True, spec_decode=spec,
+        )
+        rids = [e.submit(p, max_new_tokens=10, eos_id=eos) for p in prompts]
+        done = e.run_until_drained()
+        return [done[r] for r in rids]
+
+    for w, g in zip(drain_eos(None), drain_eos(cfg)):
+        np.testing.assert_array_equal(w, g)
+
+
+def test_spec_draft_window_still_exact(llama):
+    """A draft attention window caps the *proposal* page walk only; the
+    verify pass attends over the full history, so output is unchanged."""
+    m, params = llama
+    prompts = _prompts(m.cfg.vocab_size)
+    want, _ = _drain(m, params, prompts, 12)
+    got, _ = _drain(
+        m, params, prompts, 12,
+        spec_decode=SpecConfig(k=3, draft_codec="nf4", draft_window=16),
+    )
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+
+
+def test_spec_bit_identical_on_mesh(llama):
+    if jax.device_count() < 2:
+        pytest.skip("needs >=2 devices (run under XLA_FLAGS host device count)")
+    from repro.launch.mesh import make_test_mesh
+
+    m, params = llama
+    mesh = make_test_mesh(2, 1)
+    prompts = _prompts(m.cfg.vocab_size)
+    want, _ = _drain(m, params, prompts, 10, mesh=mesh)
+    got, _ = _drain(
+        m, params, prompts, 10, mesh=mesh,
+        spec_decode=SpecConfig(k=2, draft_codec="nf4"),
+    )
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+
+
+# ---------------------------------------------------------------------------
+# configuration and accounting
+# ---------------------------------------------------------------------------
+
+def test_spec_config_validation(llama):
+    with pytest.raises(ValueError, match="k >= 1"):
+        SpecConfig(k=0)
+    with pytest.raises(ValueError, match="draft_window"):
+        SpecConfig(draft_window=-1)
+    with pytest.raises(ValueError, match="rounds"):
+        SpecConfig(rounds=0)
+    m, params = llama
+    with pytest.raises(ValueError, match="paged"):
+        GenerationEngine(m, params, paged=False, spec_decode=SpecConfig())
+
+
+def test_non_spec_engine_reports_zero_acceptance(llama):
+    m, params = llama
+    prompts = _prompts(m.cfg.vocab_size, (6,))
+    _, eng = _drain(m, params, prompts, 4)
+    st = eng.scheduler.stats()
+    assert st["draft_tokens"] == 0 and st["verify_calls"] == 0
+    assert st["accepted_tokens_per_step"] == 0.0
+
+
+def test_spec_engine_builds_cheaper_draft_tree(llama):
+    from repro.core.compression import CompressedTensor
+    from repro.core.decompress import compressed_bytes
+
+    m, params = llama
+    eng = GenerationEngine(
+        m, params, max_len=64, paged=True, block_size=8,
+        spec_decode=SpecConfig(k=3, draft_codec="nf4"),
+    )
+    assert eng.draft_params is not None
+    assert compressed_bytes(eng.draft_params) < compressed_bytes(eng.params)
+    leaves = jax.tree_util.tree_leaves(
+        eng.draft_params, is_leaf=lambda x: isinstance(x, CompressedTensor)
+    )
+    assert any(isinstance(l, CompressedTensor) for l in leaves)
+
+
+# ---------------------------------------------------------------------------
+# rollback bookkeeping (deterministic complement to the hypothesis battery
+# in test_paged_cache.py, which needs the [test] extra)
+# ---------------------------------------------------------------------------
+
+def test_rollback_trims_tail_credits_reservation_and_regrows():
+    """Unit rollback semantics: whole trailing pages drop, within-page
+    rejects are a no-op, the reservation credit lets the request re-grow to
+    its admitted budget, and freed pages leave the un-drained fresh list."""
+    cache = PagedKVCache(_PoolStub(), num_blocks=8, block_size=2)
+    cache.admit(0, 12)
+    cache.write_slots(0, 0, 9)  # pages 0..4, reservation 6 -> 1
+    assert cache.blocks_held(0) == 5 and cache._reserved[0] == 1
+    fresh0 = list(cache._fresh)
+    # pos 8 rejected: page 4 held only token 8, so it drops whole
+    assert cache.rollback(0, 8) == 1
+    assert cache.blocks_held(0) == 4 and cache._reserved[0] == 2
+    # the freed page must not be scrubbed by this round's step anymore
+    assert len(cache._fresh) == len(fresh0) - 1
+    assert cache.rollback(0, 7) == 0  # pos 7 is mid-page 3: nothing to trim
+    assert cache.blocks_held(0) == 4
+    assert cache.rollback(0, 3) == 2  # pages 2,3 drop
+    assert cache.blocks_held(0) == 2 and cache._reserved[0] == 4
+    # re-grow to the full admitted budget: credits make it exactly possible
+    cache.write_slots(0, 3, 9)
+    assert cache.blocks_held(0) == 6 and cache._reserved[0] == 0
+    cache.release(0)
+    assert cache.allocator.free_count == 8
+
+
+def test_rollback_on_shared_pages_only_drops_this_requests_ref():
+    """Rolling a fork back across a CoW boundary: the sibling's and the
+    index's references on shared prefix pages survive; only the fork's
+    private tail pages return to the free list."""
+    bs = 2
+    cache = PagedKVCache(
+        _PoolStub(), num_blocks=16, block_size=bs, prefix_cache=True
+    )
+    donor = list(range(1, 4 * bs + 1))
+    cache.admit(0, len(donor) + 2, prompt=donor)
+    cache.write_slots(0, 0, len(donor))
+    cache.prefix_insert(0, donor)
+    hit = cache.admit(1, len(donor) + 6, prompt=donor)
+    assert hit == len(donor) - 1
+    cache.write_slots(1, hit, 6 + len(donor) - hit)  # CoW + private tail
+    held = cache.blocks_held(1)
+    shared = [p for p in cache._tables[1] if cache.allocator.ref_count(p) > 1]
+    assert shared  # the fork really does sit on shared prefix pages
+    free0 = cache.allocator.free_count
+    freed = cache.rollback(1, len(donor) + 1)
+    assert freed == held - cache.blocks_held(1)
+    assert cache.allocator.free_count == free0 + freed
+    for p in shared:
+        assert cache.allocator.ref_count(p) >= 1  # donor/index refs intact
+    assert cache._tables[0] == [
+        p for p in cache._tables[0]
+    ]  # donor untouched
+    cache.release(0)
+    cache.release(1)
+    occ = cache.occupancy()
+    assert occ["used"] == occ["cached"] == cache.prefix.pages
+
+
+# ---------------------------------------------------------------------------
+# SLA-aware chunked prefill (RoofLens-driven sizing)
+# ---------------------------------------------------------------------------
+
+def test_prefill_span_cap_follows_sla(llama):
+    """With a bound RoofLens and an SLA budget, the chunked-prefill span is
+    the largest page-aligned pow2 step whose predicted launch time fits the
+    budget; without either, the fixed `prefill_chunk` is untouched."""
+    from repro.obs import Observability
+
+    m, params = llama
+    obs = Observability.default()
+    eng = GenerationEngine(
+        m, params, max_len=64, paged=True, block_size=8, max_slots=2,
+        prefill_chunk=32, obs=obs, prefill_sla_s=1e9,
+    )
+    sched = eng.scheduler
+    pend = [(0, types.SimpleNamespace(prefilled=0, prompt=list(range(48))))]
+    # generous budget: full chunk; starvation budget: exactly one page
+    assert sched._prefill_span_cap(pend) == 32
+    sched.prefill_sla_s = 1e-12
+    assert sched._prefill_span_cap(pend) == 8
+    sched.prefill_sla_s = None
+    assert sched._prefill_span_cap(pend) == 32
+    # no obs bundle installed -> the knob is inert even when set
+    eng2 = GenerationEngine(
+        m, params, max_len=64, paged=True, block_size=8, max_slots=2,
+        prefill_chunk=32, prefill_sla_s=1e-12,
+    )
+    assert eng2.scheduler._prefill_span_cap(pend) == 32
+
+
+def test_sla_prefill_sizing_never_changes_tokens(llama):
+    """SLA-driven span shrinking is a scheduling decision only: a
+    starvation-level budget forces one-page prefill bites, and the output
+    still matches the default engine token-for-token."""
+    from repro.obs import Observability
+
+    m, params = llama
+    prompts = _prompts(m.cfg.vocab_size, (26, 19), seed=5)
+    want, _ = _drain(m, params, prompts, 6, prefill_chunk=32)
+    got, _ = _drain(
+        m, params, prompts, 6, prefill_chunk=32,
+        obs=Observability.default(), prefill_sla_s=1e-12,
+    )
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+
+
+# ---------------------------------------------------------------------------
+# roofline regimes
+# ---------------------------------------------------------------------------
+
+def test_rooflens_draft_verify_regimes(llama):
+    """A spec engine with obs prices draft and verify as separate roofline
+    regimes: observe_spec splits each round's measured wall time pro-rata,
+    and the calibration report covers both."""
+    from repro.obs import Observability
+
+    m, params = llama
+    obs = Observability.default()
+    prompts = _prompts(m.cfg.vocab_size, (6, 11), seed=2)
+    _, eng = _drain(
+        m, params, prompts, 8, obs=obs,
+        spec_decode=SpecConfig(k=3, draft_codec="nf4"),
+    )
+    lens = obs.rooflens
+    assert lens.predict_draft([32, 48], 3, 2) > 0
+    assert lens.predict_verify([32, 48], 3, 2) > 0
+    # the drained run recorded samples in both regimes
+    regimes = {s.regime for s in lens.samples}
+    assert {"draft", "verify"} <= regimes
+    cal = lens.calibrate()
+    assert set(cal) >= {"draft", "verify"}
