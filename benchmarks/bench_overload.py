@@ -1,0 +1,323 @@
+"""Overload-resilience harness (DESIGN.md §17, the PR 9 deliverable).
+
+The latency harness (bench_latency.py) drives the engine *below* capacity
+and reports what a client sees when the server keeps up. This harness asks
+the opposite question: what happens at ~2x sustainable load? An engine
+with no admission policy serves every request eventually — which means it
+serves most of them uselessly late, with queues (and TTFT) growing without
+bound for the duration of the burst. The §17 resilience layer instead
+sheds what it cannot serve on time and keeps the requests it *does* admit
+inside their SLO.
+
+Both engines see byte-identical traffic: open-loop Poisson arrivals at
+`--overload` times the measured service capacity. Capacity and the SLOs
+are derived from a closed-loop service-time measurement on this machine,
+so the committed baseline is machine-portable: the guard holds *shapes*
+(policy p99 TTFT inside the SLO, the no-policy baseline breaching it,
+policy goodput strictly above baseline goodput), never absolute seconds.
+
+Reported per engine:
+
+  * goodput — tokens/sec counting only requests that completed inside
+    their deadline (late tokens are wasted work a client already gave up
+    on),
+  * shed rate — the fraction of requests terminated without service
+    (SHED / EXPIRED), which is the price paid for the goodput, and
+  * p99 TTFT of admitted requests (from the Tracer's token-visibility
+    timestamps; shed requests never produce a first token).
+
+plus the §17 safety net: every request ends in an explicit terminal
+status, zero engine-fatal exceptions, and the page-conservation audit
+(`Scheduler.check_invariants`) holds at drain.
+
+    PYTHONPATH=src:. python benchmarks/bench_overload.py --smoke
+    PYTHONPATH=src:. python benchmarks/bench_overload.py --requests 48 \
+        --overload 3.0 --json BENCH_PR9.json
+
+Committed numbers live in BENCH_PR9.json; `benchmarks/check_regression.py
+overload_serving` guards them in CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.bench_latency import _build_engine, _make_prompts, _warmup
+from benchmarks.common import row
+from repro.obs import Observability
+from repro.serve.slo import RequestStatus, SLAPolicy
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else math.nan
+
+
+def _drive_open_loop(engine, prompts, arrivals, *, max_new: int,
+                     deadline_s: Optional[float]) -> Dict:
+    """Submit by the Poisson clock, step until drained, stamp finishes.
+
+    Never lets a scheduler exception escape: an engine-fatal error is the
+    headline failure this harness exists to rule out, so it is captured
+    and reported instead of crashing the benchmark.
+    """
+    sch = engine.scheduler
+    finish: Dict[int, float] = {}
+    rids: List[int] = []
+    fatal = None
+    t0 = time.perf_counter()
+    nxt = 0
+    try:
+        while nxt < len(prompts) or sch.queue or any(
+            r is not None for r in sch.slots
+        ):
+            now = time.perf_counter() - t0
+            while nxt < len(prompts) and arrivals[nxt] <= now:
+                rids.append(engine.submit(prompts[nxt],
+                                          max_new_tokens=max_new,
+                                          deadline_s=deadline_s))
+                nxt += 1
+            if sch.queue or any(r is not None for r in sch.slots):
+                sch.step()
+            elif nxt < len(prompts):
+                time.sleep(max(0.0, arrivals[nxt]
+                               - (time.perf_counter() - t0)))
+            for rid in sch.results:
+                finish.setdefault(rid, time.perf_counter() - t0)
+    except Exception as e:  # noqa: BLE001 — the point is to prove this never fires
+        fatal = repr(e)
+    wall = time.perf_counter() - t0
+    return {"rids": rids, "finish": finish, "wall": wall, "fatal": fatal,
+            "n_submitted": nxt}
+
+
+def _summarize(engine, drive, arrivals, *, deadline_budget_s: float) -> Dict:
+    sch = engine.scheduler
+    statuses = dict(sch.statuses)
+    results = dict(sch.results)
+    rids, finish, wall = drive["rids"], drive["finish"], drive["wall"]
+
+    good_tokens = 0
+    served = 0
+    for i, rid in enumerate(rids):
+        if statuses.get(rid) != RequestStatus.OK:
+            continue
+        served += 1
+        done = finish.get(rid, math.inf)
+        if done - arrivals[i] <= deadline_budget_s:
+            good_tokens += len(results[rid])
+    shed = sum(1 for rid in rids
+               if statuses.get(rid) in (RequestStatus.SHED,
+                                        RequestStatus.EXPIRED))
+    all_terminal = (
+        drive["fatal"] is None
+        and len(rids) == drive["n_submitted"]
+        and all(rid in statuses and rid in results for rid in rids)
+    )
+    try:
+        occupancy = sch.check_invariants()
+        invariants_ok = occupancy["used"] == occupancy["cached"]
+    except RuntimeError as e:
+        occupancy, invariants_ok = {"audit_error": repr(e)}, False
+
+    ttft = engine.obs.tracer.summary()["ttft_s"]
+    return {
+        "goodput_tok_s": round(good_tokens / wall, 2) if wall else math.nan,
+        "good_tokens": good_tokens,
+        "served": served,
+        "shed": shed,
+        "shed_rate": round(shed / len(rids), 4) if rids else math.nan,
+        "ttft_p99_ms": round(ttft["p99"] * 1e3, 3),
+        "ttft_p50_ms": round(ttft["p50"] * 1e3, 3),
+        "wall_s": round(wall, 3),
+        "statuses": {
+            s.value: sum(1 for r in rids if statuses.get(r) == s)
+            for s in RequestStatus
+        },
+        "all_terminal": all_terminal,
+        "invariants_ok": invariants_ok,
+        "fatal": drive["fatal"],
+        "occupancy": occupancy,
+    }
+
+
+def run_overload(
+    *,
+    overload: float = 2.0,
+    n_requests: int = 28,
+    prompt_lo: int = 8,
+    prompt_hi: int = 32,
+    max_new: int = 16,
+    fmt: str = "mxfp4_100",
+    chunk: int = 4,
+    max_slots: int = 4,
+    block_size: int = 8,
+    max_len: int = 96,
+    seed: int = 0,
+) -> Dict:
+    """Measure capacity, then race identical overload traffic through a
+    no-policy engine and an SLO-gated engine; returns the BENCH_PR9 dict."""
+    engines = {}
+    for name in ("baseline", "policy"):
+        obs = Observability.default()
+        engines[name] = _build_engine(
+            fmt=fmt, kv_quant=None, chunk=chunk, max_slots=max_slots,
+            block_size=block_size, max_len=max_len, obs=obs,
+        )
+    rng = np.random.default_rng(seed)
+    vocab = engines["baseline"].cfg.vocab_size
+    wkw = dict(prompt_lo=prompt_lo, prompt_hi=prompt_hi, max_new=max_new,
+               chunk=chunk, max_slots=max_slots)
+
+    # warm both engines over the same bucket grid (compiles land here, not
+    # in the measured run) and calibrate each RoofLens on its clean second
+    # sweep — the policy engine's TTFT gate consumes those predictions
+    for eng in engines.values():
+        _warmup(eng, np.random.default_rng(seed + 1), **wkw)
+        eng.obs.rooflens.reset_samples()
+        _warmup(eng, np.random.default_rng(seed + 1), **wkw)
+        eng.obs.rooflens.calibrate()
+        eng.obs.rooflens.reset_samples()
+
+    # machine-local capacity: wall time for one full closed-loop batch
+    base = engines["baseline"]
+    for _ in range(max_slots):
+        base.submit(rng.integers(0, vocab, prompt_hi).astype(np.int32),
+                    max_new_tokens=max_new)
+    t0 = time.perf_counter()
+    base.run_until_drained()
+    t_service = time.perf_counter() - t0
+    capacity_req_s = max_slots / t_service
+
+    # SLOs in service-time units (machine-portable by construction). The
+    # engine gates at 80% of the reported TTFT SLO so the post-admission
+    # prefill itself cannot push an admitted request past it.
+    ttft_slo_s = 1.5 * t_service
+    deadline_s = 3.0 * t_service
+    rate = overload * capacity_req_s
+
+    # the policy is installed after warmup because its objectives are in
+    # units of the service time just measured; every gate reads `sla` live
+    sla = SLAPolicy(ttft_slo_s=0.8 * ttft_slo_s, max_queue=2 * max_slots)
+    engines["policy"].scheduler.sla = sla
+
+    prompts = _make_prompts(rng, n_requests, prompt_lo, prompt_hi, vocab)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    out = {}
+    for name, eng in engines.items():
+        eng.obs.tracer.reset()
+        drive = _drive_open_loop(
+            eng, prompts, arrivals, max_new=max_new,
+            deadline_s=deadline_s if name == "policy" else None,
+        )
+        out[name] = _summarize(eng, drive, arrivals,
+                               deadline_budget_s=deadline_s)
+
+    b, p = out["baseline"], out["policy"]
+    gain = (p["goodput_tok_s"] / b["goodput_tok_s"]
+            if b["goodput_tok_s"] else math.inf)
+    return {
+        "overload_factor": overload,
+        "rate_req_s": round(rate, 3),
+        "capacity_req_s": round(capacity_req_s, 3),
+        "t_service_s": round(t_service, 4),
+        "ttft_slo_ms": round(ttft_slo_s * 1e3, 3),
+        "deadline_ms": round(deadline_s * 1e3, 3),
+        "n_requests": n_requests,
+        "max_new": max_new,
+        "chunk": chunk,
+        "max_slots": max_slots,
+        "fmt": fmt,
+        "baseline": b,
+        "policy": p,
+        "goodput_gain": round(gain, 3),
+    }
+
+
+SMOKE = dict(overload=2.0, n_requests=24, prompt_lo=8, prompt_hi=32,
+             max_new=12, chunk=4, max_slots=4)
+
+
+def overload_serving_results(**overrides) -> Dict:
+    """The check_regression entry point (smoke-scale, deterministic seed)."""
+    kw = dict(SMOKE)
+    kw.update(overrides)
+    return run_overload(**kw)
+
+
+def overload_row(res: Dict) -> Dict[str, str]:
+    b, p = res["baseline"], res["policy"]
+    return row(
+        "overload_serving",
+        p["goodput_tok_s"],
+        f"overload={res['overload_factor']}x slo_ms={res['ttft_slo_ms']} "
+        f"policy_goodput={p['goodput_tok_s']} base_goodput={b['goodput_tok_s']} "
+        f"gain={res['goodput_gain']} shed_rate={p['shed_rate']} "
+        f"policy_ttft_p99_ms={p['ttft_p99_ms']} "
+        f"base_ttft_p99_ms={b['ttft_p99_ms']}",
+    )
+
+
+def bench_overload_serving() -> List[Dict[str, str]]:
+    return [overload_row(overload_serving_results())]
+
+
+def _print_table(res: Dict) -> None:
+    print(f"overload: {res['n_requests']} requests at {res['rate_req_s']} "
+          f"req/s ({res['overload_factor']}x measured capacity "
+          f"{res['capacity_req_s']} req/s), ttft slo {res['ttft_slo_ms']} ms,"
+          f" deadline {res['deadline_ms']} ms")
+    hdr = (f"{'engine':<10}{'goodput':>10}{'served':>8}{'shed%':>8}"
+           f"{'ttft_p99':>10}{'fatal':>7}{'audit':>7}")
+    print(hdr)
+    for name in ("baseline", "policy"):
+        d = res[name]
+        print(f"{name:<10}{d['goodput_tok_s']:>10.2f}{d['served']:>8}"
+              f"{100 * d['shed_rate']:>8.1f}{d['ttft_p99_ms']:>10.1f}"
+              f"{str(d['fatal'] is not None):>7}"
+              f"{str(d['invariants_ok']):>7}")
+    print(f"goodput gain (policy/baseline): {res['goodput_gain']}x")
+    print("terminal statuses (policy):",
+          {k: v for k, v in res["policy"]["statuses"].items() if v})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--overload", type=float, default=2.0,
+                    help="arrival rate as a multiple of measured capacity")
+    ap.add_argument("--requests", type=int, default=28)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--format", default="mxfp4_100")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI preset: few requests, small chunks")
+    ap.add_argument("--csv", metavar="FILE", default=None)
+    ap.add_argument("--json", metavar="FILE", default=None)
+    args = ap.parse_args()
+
+    kw = dict(overload=args.overload, n_requests=args.requests,
+              max_new=args.max_new, chunk=args.chunk,
+              max_slots=args.max_slots, fmt=args.format, seed=args.seed)
+    if args.smoke:
+        kw.update(SMOKE)
+    res = run_overload(**kw)
+    _print_table(res)
+    if args.csv:
+        from benchmarks.common import csv_line
+
+        with open(args.csv, "a") as f:
+            f.write(csv_line(overload_row(res)) + "\n")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,14 @@ Benchmarks:
                      PR 5 long-context shape; spec decode tokens/sec must
                      strictly beat the non-speculative engine and the
                      acceptance rate must stay above one token per verify
+    overload_serving BENCH_PR9.json — overload resilience (DESIGN.md §17):
+                     identical 2x-capacity Poisson traffic through a
+                     no-policy engine and the SLO-gated engine; the gated
+                     engine's admitted p99 TTFT must sit inside the SLO
+                     while the baseline breaches it, goodput must strictly
+                     beat the baseline, every request must end in a
+                     terminal status, and the page-conservation audit must
+                     hold at drain
 """
 from __future__ import annotations
 
@@ -72,6 +80,12 @@ def _spec_decode():
     from benchmarks.bench_spec import spec_decode_results, spec_row
 
     return spec_decode_results(), spec_row
+
+
+def _overload_serving():
+    from benchmarks.bench_overload import overload_row, overload_serving_results
+
+    return overload_serving_results(), overload_row
 
 
 def _check_speedup(name: str, base, res) -> bool:
@@ -169,6 +183,49 @@ def _check_spec(name: str, base, res) -> bool:
     return ok
 
 
+def _check_overload(name: str, base, res) -> bool:
+    """Resilience guard: all four checks are shapes, not seconds. The SLO
+    itself is derived from this machine's measured service time, so
+    "policy inside / baseline outside" is portable; the goodput comparison
+    races the two engines on identical traffic on the same machine; the
+    terminal-status and page-audit flags are invariants. The committed
+    baseline's goodput gain additionally floors how much of the margin a
+    scheduler change may give back (a quarter of the committed gain)."""
+    b, p = res["baseline"], res["policy"]
+    slo = res["ttft_slo_ms"]
+    need_gain = max(1.0, 1.0 + 0.25 * (base["goodput_gain"] - 1.0))
+    print(
+        f"[{name}] baseline run: goodput {b['goodput_tok_s']} tok/s, "
+        f"ttft p99 {b['ttft_p99_ms']} ms (slo {slo} ms)\n"
+        f"[{name}] policy run:   goodput {p['goodput_tok_s']} tok/s, "
+        f"ttft p99 {p['ttft_p99_ms']} ms, shed rate {p['shed_rate']}\n"
+        f"[{name}] committed gain {base['goodput_gain']}x, this run "
+        f"{res['goodput_gain']}x (required > {need_gain:.3f}x)"
+    )
+    ok = True
+    if not p["ttft_p99_ms"] <= slo:  # catches nan too
+        print(f"[{name}] REGRESSION: admitted p99 TTFT breached the SLO")
+        ok = False
+    if not b["ttft_p99_ms"] > slo:
+        print(f"[{name}] REGRESSION: traffic no longer overloads the "
+              "baseline — the comparison is vacuous")
+        ok = False
+    if not res["goodput_gain"] > need_gain:
+        print(f"[{name}] REGRESSION: shedding no longer buys goodput")
+        ok = False
+    for eng in ("baseline", "policy"):
+        d = res[eng]
+        if d["fatal"] is not None or not d["all_terminal"]:
+            print(f"[{name}] REGRESSION: {eng} engine fatal={d['fatal']} "
+                  f"all_terminal={d['all_terminal']}")
+            ok = False
+        if not d["invariants_ok"]:
+            print(f"[{name}] REGRESSION: {eng} page-conservation audit "
+                  f"failed: {d['occupancy']}")
+            ok = False
+    return ok
+
+
 MANIFEST = {
     "decode_chunk": {
         "baseline": "BENCH_PR4.json",
@@ -239,6 +296,22 @@ MANIFEST = {
             "speedup and accepted tokens per verify > 1"
         ),
         "check": _check_spec,
+    },
+    "overload_serving": {
+        "baseline": "BENCH_PR9.json",
+        "run": _overload_serving,
+        "note": (
+            "overload-resilience smoke (24 requests, Poisson arrivals at "
+            "2x the closed-loop-measured capacity, prompts 8-32, 12 new "
+            "tokens, chunk=4, max_slots=4, mxfp4_100 weights; TTFT SLO = "
+            "1.5x and deadline = 3x the measured service time): identical "
+            "traffic through a no-policy engine and one gated by SLAPolicy "
+            "(bounded queue + roofline-predicted TTFT shedding); guards "
+            "policy-p99-TTFT <= SLO < baseline-p99-TTFT, the "
+            "deadline-met goodput gain, universal terminal statuses, and "
+            "the page-conservation audit at drain"
+        ),
+        "check": _check_overload,
     },
 }
 

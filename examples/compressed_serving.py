@@ -13,6 +13,11 @@ of different prompt lengths go through submit()/run_until_drained() on the
 block-paged KV cache, and the report includes slot occupancy and the
 padding waste a max_len ring cache would have paid.
 
+`--ttft-slo/--itl-slo/--deadline/--max-queue` install the DESIGN.md §17
+overload policy on the paged path: requests the engine cannot serve on
+time are shed/expired with explicit terminal statuses, and the report
+adds a per-status summary table.
+
 Sharded decode: `--mesh DxM` lays the compressed weights (codes/mask/scales
 along the dense (K, N) axes) over a (data, model) device mesh — e.g.
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
@@ -98,9 +103,28 @@ def main():
                     help="attach a metrics registry and dump the "
                          "serve.* counters/gauges/histograms after the "
                          "run; implies --paged")
+    ap.add_argument("--ttft-slo", type=float, default=None, metavar="S",
+                    help="SLO admission control (DESIGN.md §17): shed "
+                         "queued requests whose wait plus roofline-"
+                         "predicted prefill would breach S seconds to "
+                         "first token; implies --paged")
+    ap.add_argument("--itl-slo", type=float, default=None, metavar="S",
+                    help="defer admissions that would push the predicted "
+                         "per-token decode latency of running requests "
+                         "past S seconds; implies --paged")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="per-request deadline: a request still queued S "
+                         "seconds after submit is expired (parked "
+                         "requests keep their partial output); implies "
+                         "--paged")
+    ap.add_argument("--max-queue", type=int, default=None, metavar="N",
+                    help="bound the submit queue at N requests; later "
+                         "submits are shed instantly; implies --paged")
     args = ap.parse_args()
+    sla_requested = (args.ttft_slo or args.itl_slo or args.deadline
+                     or args.max_queue)
     if (args.trace or args.metrics or args.prefix_cache or args.prefill_chunk
-            or args.spec_k):
+            or args.spec_k or sla_requested):
         # these features all live in the paged scheduler path
         args.paged = True
 
@@ -131,10 +155,22 @@ def main():
             # every request — the shape the radix index exists to win
             sys_prompt = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
         obs = None
-        if args.trace or args.metrics:
+        if args.trace or args.metrics or sla_requested:
+            # the SLO gates consume RoofLens predictions, so an SLA run
+            # brings the observability stack along
             from repro.obs import Observability
 
             obs = Observability.default()
+        sla = None
+        if sla_requested:
+            from repro.serve.slo import SLAPolicy
+
+            sla = SLAPolicy(ttft_slo_s=args.ttft_slo,
+                            itl_slo_s=args.itl_slo,
+                            max_queue=args.max_queue)
+            print(f"SLA policy: ttft_slo={args.ttft_slo} "
+                  f"itl_slo={args.itl_slo} max_queue={args.max_queue} "
+                  f"deadline={args.deadline}")
         spec_cfg = None
         if args.spec_k:
             from repro.serve.engine import SpecConfig
@@ -147,7 +183,7 @@ def main():
                                   decode_chunk=args.chunk,
                                   prefix_cache=args.prefix_cache,
                                   prefill_chunk=args.prefill_chunk, obs=obs,
-                                  spec_decode=spec_cfg)
+                                  spec_decode=spec_cfg, sla=sla)
         if spec_cfg is not None:
             draft_bytes = compressed_bytes(engine.draft_params)
             print(f"self-speculation: k={args.spec_k} draft={args.draft_codec} "
@@ -164,7 +200,8 @@ def main():
             return np.concatenate([sys_prompt, tail])
 
         rids = [
-            engine.submit(make_prompt(n), max_new_tokens=args.steps)
+            engine.submit(make_prompt(n), max_new_tokens=args.steps,
+                          deadline_s=args.deadline)
             for n in lengths
         ]
         t0 = time.perf_counter()
@@ -175,6 +212,20 @@ def main():
         print(f"served {len(rids)} mixed-length requests "
               f"(prompts {min(lengths)}-{max(lengths)} tokens), "
               f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+        if sla_requested:
+            # every request resolves to a terminal status (DESIGN.md §17)
+            statuses = engine.statuses
+            print(f"{'status':<12}{'requests':>9}{'tokens':>8}")
+            for status in sorted({statuses[r] for r in rids},
+                                 key=lambda s: s.value):
+                members = [r for r in rids if statuses[r] == status]
+                print(f"{status.value:<12}{len(members):>9}"
+                      f"{sum(len(done[r]) for r in members):>8}")
+            print(f"resilience: sheds={st['shed_requests']} "
+                  f"expired={st['expired_requests']} "
+                  f"parked={st['parked_requests']} "
+                  f"degradations={st['degradations']} "
+                  f"itl_deferrals={st['itl_deferrals']}")
         print(f"paged KV: block_size={args.block_size} "
               f"peak_blocks={st['peak_blocks']} "
               f"mean_occupancy={st['mean_occupancy']:.2f} "

@@ -26,13 +26,23 @@ class InjectedFault(RuntimeError):
         self.action = action
 
 
+#: Fault kinds the serving scheduler consumes via `take` (DESIGN.md §17).
+#: "slow" is shared with the training path; the other two only make sense
+#: inside the scheduler loop: "exhaust_pool" grabs the pool's unreserved
+#: headroom for one round (admission sees zero admittable pages, residents'
+#: reservations stay backed), "poison_prefill" overwrites one prefill row's
+#: logits with NaN so the host-sync guard must fail exactly that request.
+SERVING_FAULTS = ("slow", "exhaust_pool", "poison_prefill")
+
+
 class FaultInjector:
     """Deterministic, seed-driven step failures.
 
     Two sources, both deterministic:
       plan   : explicit {step: action} schedule — "crash" (raise
                InjectedFault) or "slow" (sleep `slow_s`, a straggler the
-               watchdog should catch)
+               watchdog should catch); the serving scheduler additionally
+               understands the `SERVING_FAULTS` kinds through `take`
       p_fail : per-step crash probability drawn from a counter-based seeded
                stream — a pure function of (seed, step), so two injectors
                with the same seed fail the same steps.
@@ -79,6 +89,20 @@ class FaultInjector:
             time.sleep(self.slow_s)
             return
         raise InjectedFault(step, action)
+
+    def take(self, step: int, kind: str) -> bool:
+        """Consume a scheduled fault of `kind` at `step`, at most once.
+
+        The serving scheduler's polling shape: it asks for each fault kind
+        it knows how to apply at the point in the round where that fault is
+        applied (sleep before the round, poison inside the prefill launch,
+        pool grab before admission), instead of one raise-at-poll site —
+        a serving fault degrades one request or one round, never the
+        engine. Returns True exactly once per (step, kind) hit."""
+        if self.plan.get(step) != kind or (step, kind) in self.fired:
+            return False
+        self.fired.add((step, kind))
+        return True
 
 
 class StragglerWatchdog:

@@ -311,6 +311,17 @@ class RoofLens:
         """Calibrated predicted wall seconds for one decode chunk."""
         return self._raw_decode(kv_lens, steps) * self.scale.get("decode", 1.0)
 
+    def predict_decode_chunk(self, kv_lens: Sequence[float],
+                             steps: int = 1) -> float:
+        """Admission-control entry point (DESIGN.md §17): the predicted
+        wall seconds of one `steps`-step decode chunk over a *hypothetical*
+        batch — the scheduler passes the current residents' context lengths
+        plus the candidate's, and divides by `steps` for the marginal
+        per-token ITL the candidate would impose. Same model as
+        `predict_decode` (one decode chunk is one decode chunk); the alias
+        exists so the admission call site names the question it asks."""
+        return self.predict_decode(kv_lens, steps)
+
     def predict_draft(self, kv_lens: Sequence[float], k: int,
                       rounds: int = 1) -> float:
         """Calibrated predicted wall seconds for a spec chunk's draft passes."""

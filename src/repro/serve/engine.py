@@ -295,6 +295,14 @@ class GenerationEngine:
     decode batch rows, chip count). Observability is host-side only: it
     never enters a jitted function, and with `obs=None` (the default) the
     serving loop takes the exact pre-PR6 path.
+
+    `sla` installs a `repro.serve.slo.SLAPolicy` (DESIGN.md §17): bounded
+    queue, TTFT shedding, roofline-driven ITL admission deferral, and the
+    graceful-degradation ladder down to parking residents. `injector` /
+    `watchdog` hook a `repro.dist.fault.FaultInjector` /
+    `StragglerWatchdog` into the scheduler round loop (the serving chaos
+    harness). All three require the paged engine; terminal per-request
+    statuses surface through `GenerationEngine.statuses`.
     """
 
     def __init__(
@@ -319,6 +327,9 @@ class GenerationEngine:
         obs=None,
         spec_decode: Optional[SpecConfig] = None,
         prefill_sla_s: Optional[float] = None,
+        sla=None,
+        injector=None,
+        watchdog=None,
     ):
         if kv_quant is not None and kv_quant != model.cfg.kv_quant:
             # end-to-end kv_quant plumbing: the format name is a codec-
@@ -368,6 +379,13 @@ class GenerationEngine:
         self.paged = bool(paged)
         if spec_decode is not None and not self.paged:
             raise ValueError("spec_decode requires the paged engine")
+        if not self.paged and (
+            sla is not None or injector is not None or watchdog is not None
+        ):
+            raise ValueError(
+                "sla / injector / watchdog require the paged engine "
+                "(the dense ring cache has no admission loop to gate)"
+            )
         self.scheduler: Optional[Scheduler] = None
         if self.paged:
             self.block_size = block_size
@@ -433,6 +451,9 @@ class GenerationEngine:
                     spec_decode.draft_window if spec_decode is not None else 0
                 ),
                 prefill_sla_s=prefill_sla_s,
+                sla=sla,
+                injector=injector,
+                watchdog=watchdog,
             )
 
     def _mesh_scope(self):
@@ -613,13 +634,28 @@ class GenerationEngine:
         *,
         max_new_tokens: int,
         eos_id: Optional[int] = None,
+        deadline_s: Optional[float] = None,
+        priority: int = 0,
     ) -> int:
-        """Enqueue one request; returns its id (key into run_until_drained)."""
+        """Enqueue one request; returns its id (key into run_until_drained).
+        `deadline_s` / `priority` feed the §17 resilience layer: a deadline
+        drops the request (EXPIRED / PREEMPTED) once it can no longer be
+        served; priority orders park-victim selection under pool pressure."""
         if not self.paged:
             raise RuntimeError("request-level API requires the paged engine")
         return self.scheduler.submit(
-            prompt, max_new_tokens=max_new_tokens, eos_id=eos_id
+            prompt, max_new_tokens=max_new_tokens, eos_id=eos_id,
+            deadline_s=deadline_s, priority=priority,
         )
+
+    @property
+    def statuses(self) -> Dict[int, Any]:
+        """rid -> terminal `RequestStatus` for every finished request (§17).
+        Unlike results, statuses are not drained — the mapping accumulates
+        for the engine's lifetime."""
+        if not self.paged:
+            raise RuntimeError("request-level API requires the paged engine")
+        return dict(self.scheduler.statuses)
 
     def run_until_drained(self) -> Dict[int, np.ndarray]:
         """Step the scheduler until every submitted request completes."""

@@ -234,6 +234,18 @@ class PrefixIndex:
                 out.append(n)
         return out
 
+    def page_multiset(self) -> List[int]:
+        """Every page the index holds a reference on, one entry per
+        reference (the index holds exactly one per node). Audit hook for
+        `Scheduler.check_invariants` and the hypothesis batteries."""
+        out, stack = [], [self._root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n.page is not None:
+                out.append(n.page)
+        return out
+
 
 class PagedKVCache:
     """Block tables + device pools for one serving engine instance."""
@@ -447,6 +459,42 @@ class PagedKVCache:
             drop = {p + 1 for p in freed}
             self._fresh = [d for d in self._fresh if d not in drop]
         return len(freed)
+
+    def park(self, rid: int, tokens=None) -> int:
+        """Preempt a resident (DESIGN.md §17): drop every page the request
+        holds and its remaining reservation, so the pool can serve someone
+        else; the scheduler keeps the request's emitted tokens on host and
+        re-admits it later by re-prefilling.
+
+        When a prefix index is installed and `tokens` carries the request's
+        written history (prompt + committed output), the full pages holding
+        it are indexed *before* the release — the index reference keeps
+        them alive, so the later re-admission hits them and the resume
+        recomputes only the last partial page. Without an index (or under
+        pool pressure that later evicts those pages) the resume is a full
+        re-prefill — correct either way, the index is purely a fast path.
+
+        Built on the PR 8 rollback/refcount machinery: shared pages only
+        drop this request's reference, freed pages are scrubbed on their
+        next allocation, and pages still sitting in the un-drained fresh
+        list are dropped from it. Returns pages returned to the free list.
+        Parking an unknown / already-released rid is a no-op."""
+        if rid not in self._tables:
+            return 0
+        if tokens is not None and self.prefix is not None:
+            self.prefix.insert(tokens, self._tables[rid])
+        table = self._tables.pop(rid)
+        self._reserved.pop(rid, None)
+        freed = self.allocator.free([p for p in table if p is not None])
+        if freed and self._fresh:
+            drop = {p + 1 for p in freed}
+            self._fresh = [d for d in self._fresh if d not in drop]
+        return len(freed)
+
+    def held_pages(self, rid: int) -> List[int]:
+        """The request's live page ids (window-freed holes skipped), one
+        entry per table reference. Audit hook for check_invariants."""
+        return [p for p in self._tables.get(rid, []) if p is not None]
 
     # -- slot / table arrays for the jitted steps ----------------------------
 

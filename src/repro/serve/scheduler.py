@@ -31,12 +31,24 @@ fixed-size chunks interleaved with decode rounds — each chunk reads
 through a length-bounded block table (the PR 5 idea applied to prefill),
 and a slot joins decode only once its final chunk has sampled the first
 output token.
+
+Overload resilience (DESIGN.md §17): an `SLAPolicy` bounds the queue,
+sheds candidates that can no longer meet the TTFT SLO, defers admission
+when the calibrated roofline predicts an ITL breach, and escalates the
+graceful-degradation ladder — down to parking the lowest-priority
+resident via `PagedKVCache.park` — when the pool blocks the queue head.
+Per-request deadlines drop expired queued work at admission time. Every
+request ends in exactly one `RequestStatus` (`Scheduler.statuses`); a
+`FaultInjector` hooks the round loop for chaos testing (pool exhaustion,
+straggler rounds, poisoned prefills), and the non-finite-logit guard at
+the prefill host sync fails only the poisoned request.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import math
+import time
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
@@ -44,6 +56,7 @@ import numpy as np
 from repro.kernels import ops as kernel_ops
 from repro.models.layers import CACHE_EMPTY_POS
 from repro.serve.paged_cache import PagedKVCache
+from repro.serve.slo import LADDER, RequestStatus, SLAPolicy
 
 
 def _pow2ceil(x: int) -> int:
@@ -84,6 +97,20 @@ STAT_UNITS: Dict[str, str] = {
     "kv_read_bytes_per_token_worst": "bytes (max_blocks gather per token)",
     "draft_tokens": "tokens (draft proposals computed on the speculative path)",
     "verify_calls": "calls (per-slot verify passes on the speculative path)",
+    "shed_requests": "requests (rejected by the SLA policy: bounded queue "
+                     "at submit or predicted TTFT breach at admission)",
+    "expired_requests": "requests (deadline passed while queued, dropped "
+                        "at admission time)",
+    "preempted_requests": "requests (parked under pool pressure and "
+                          "expired before resume; partial output kept)",
+    "parked_requests": "events (residents preempted via PagedKVCache.park; "
+                       "a request can park more than once)",
+    "resumed_requests": "events (parked requests re-admitted through the "
+                        "prefix cache)",
+    "failed_requests": "requests (non-finite logits at the host sync; "
+                       "pages reclaimed, co-batched survivors unaffected)",
+    "degradations": "events (graceful-degradation ladder escalations)",
+    "itl_deferrals": "events (admissions deferred by the predicted-ITL gate)",
     "accepted_tokens_per_step": "tokens/call (tokens emitted per verify pass; "
                                 ">1 is the speculative-decode win)",
 }
@@ -93,7 +120,7 @@ STAT_UNITS: Dict[str, str] = {
 class Request:
     rid: int
     prompt: np.ndarray            # (P,) int32
-    max_new_tokens: int
+    max_new_tokens: int           # total output budget, park/resume invariant
     eos_id: Optional[int] = None
     out: List[int] = dataclasses.field(default_factory=list)
     peak_blocks: int = 0
@@ -102,10 +129,31 @@ class Request:
     # (and the slot decode-ready, signalled by a non-empty `out`) once it
     # reaches len(prompt)
     prefilled: int = 0
+    # resilience state (DESIGN.md §17)
+    priority: int = 0             # park-victim ordering; queue stays FIFO
+    deadline_t: Optional[float] = None  # absolute clock seconds, or None
+    submit_t: float = 0.0         # clock stamp for the TTFT admission gate
+    # tokens emitted before a park: park folds `out` into `prompt` (the
+    # resume re-prefills them) and banks them here — results and the
+    # sampling-key stream stay indexed by *global* output position, so a
+    # resumed request's tokens are bit-identical to an uninterrupted run
+    done_tokens: List[int] = dataclasses.field(default_factory=list)
+    parks: int = 0                # times this request has been parked
+    was_parked: bool = False      # pending-resume marker (resume counter)
 
     @property
     def next_pos(self) -> int:
         return len(self.prompt) + len(self.out)
+
+    @property
+    def emitted(self) -> int:
+        """Tokens emitted over the request's whole life — the sampling-key
+        step index and the length-cap meter, both park/resume invariant."""
+        return len(self.done_tokens) + len(self.out)
+
+    @property
+    def all_out(self) -> List[int]:
+        return self.done_tokens + self.out
 
 
 class Scheduler:
@@ -159,6 +207,16 @@ class Scheduler:
     installed RoofLens switches the chunked-prefill span from the fixed
     `prefill_chunk` to the largest predicted-to-fit ladder step (see
     `_prefill_span_cap`).
+
+    `sla` installs an `SLAPolicy` (DESIGN.md §17): bounded queue, TTFT
+    shedding and predicted-ITL admission deferral, and the graceful-
+    degradation ladder under pool pressure. `injector` hooks a
+    `dist.fault.FaultInjector` into the round loop (plan steps index
+    scheduler rounds); `watchdog` feeds a `StragglerWatchdog` each round's
+    wall time. The non-finite-logit guard at the prefill host sync is
+    armed whenever `sla` or `injector` is set; with neither, every hot
+    path is exactly the pre-PR9 one. Terminal statuses land in
+    `self.statuses` (rid -> RequestStatus) next to `self.results`.
     """
 
     def __init__(
@@ -182,6 +240,9 @@ class Scheduler:
         spec_rounds: int = 0,
         spec_window: int = 0,
         prefill_sla_s: Optional[float] = None,
+        sla: Optional[SLAPolicy] = None,
+        injector=None,
+        watchdog=None,
     ):
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
@@ -217,8 +278,21 @@ class Scheduler:
         self.queue: collections.deque = collections.deque()
         self.slots: List[Optional[Request]] = [None] * max_slots
         self.results: Dict[int, np.ndarray] = {}
+        self.statuses: Dict[int, RequestStatus] = {}  # rid -> terminal status
         self.request_peaks: Dict[int, int] = {}  # rid -> peak pages held
         self._next_rid = 0
+        # resilience state (DESIGN.md §17)
+        self.sla = sla
+        self._injector = injector
+        self._watchdog = watchdog
+        self._round = 0  # scheduler rounds; the injector plan's step index
+        self.degradation_level = 0  # rungs of slo.LADDER currently applied
+        self._spec_enabled = True
+        self._span_shrunk = False
+        self._poison_pending = False
+        # the non-finite guard adds one tiny per-row reduction to the
+        # prefill launch, so it arms only when resilience is in play
+        self._guard_nonfinite = sla is not None or injector is not None
         # occupancy / padding-waste accounting (benchmarks/run.py serving_paged)
         self._stats = {
             "decode_steps": 0, "decode_chunks": 0, "host_syncs": 0,
@@ -228,6 +302,9 @@ class Scheduler:
             "prefill_token_steps": 0, "prefill_real_tokens": 0,
             "kv_pages_read": 0, "kv_pages_read_worst": 0, "window_freed_pages": 0,
             "draft_tokens": 0, "verify_calls": 0,
+            "shed_requests": 0, "expired_requests": 0, "preempted_requests": 0,
+            "parked_requests": 0, "resumed_requests": 0, "failed_requests": 0,
+            "degradations": 0, "itl_deferrals": 0,
         }
         # observability (DESIGN.md §14): every site below is guarded on the
         # specific collector it feeds — with obs=None the serving loop does
@@ -236,6 +313,9 @@ class Scheduler:
         self._obs_tracer = obs.tracer if obs is not None else None
         self._obs_rooflens = obs.rooflens if obs is not None else None
         self._obs_clock = obs.clock if obs is not None else None
+        # deadlines / TTFT gating need a clock even without observability;
+        # share the obs clock when installed so trace timestamps line up
+        self._clock = self._obs_clock or time.monotonic
 
     # ------------------------------------------------------------------
     # request API
@@ -246,12 +326,24 @@ class Scheduler:
         *,
         max_new_tokens: int,
         eos_id: Optional[int] = None,
+        deadline_s: Optional[float] = None,
+        priority: int = 0,
     ) -> int:
+        """Enqueue one request. `deadline_s` is a relative wall-clock
+        budget: a request still queued (or parked) when it runs out is
+        dropped at admission time with status EXPIRED / PREEMPTED instead
+        of occupying the queue forever. `priority` orders park-victim
+        selection under pool pressure (lower parks first); the queue itself
+        stays FIFO. A submit past the SLA policy's `max_queue` is SHED
+        immediately — the rid still comes back, with an empty result and a
+        terminal status, never an exception."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if len(prompt) < 1:
             raise ValueError("prompt must contain at least one token")
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if deadline_s is not None and deadline_s < 0:
+            raise ValueError(f"deadline_s must be >= 0, got {deadline_s}")
         # KV footprint: prompt + every fed-back token except the last sample
         kv_len = len(prompt) + max_new_tokens - 1
         if kv_len > self.max_len:
@@ -268,13 +360,23 @@ class Scheduler:
             )
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, prompt, max_new_tokens, eos_id))
+        now = self._clock()
+        r = Request(
+            rid, prompt, max_new_tokens, eos_id, priority=priority,
+            deadline_t=None if deadline_s is None else now + deadline_s,
+            submit_t=now,
+        )
         if self._obs_tracer is not None:
             self._obs_tracer.on_submit(rid, len(prompt), max_new_tokens)
         if self._obs_metrics is not None:
             self._obs_metrics.counter(
                 "serve.requests.submitted", unit="requests"
             ).inc()
+        if self.sla is not None and self.sla.queue_full(len(self.queue)):
+            self._terminate(r, RequestStatus.SHED)
+            return rid
+        self.queue.append(r)
+        if self._obs_metrics is not None:
             self._obs_metrics.gauge(
                 "serve.queue_depth", unit="requests"
             ).set(len(self.queue))
@@ -290,29 +392,81 @@ class Scheduler:
     # one scheduling round: admission -> batched prefill -> chunked decode
     # ------------------------------------------------------------------
     def step(self) -> None:
-        self._admit()
-        if self.prefill_chunk is not None:
-            self._prefill_pending()
-        self._decode_active()
+        t0 = time.monotonic() if self._watchdog is not None else 0.0
+        chaos_pages: List[int] = []
+        if self._injector is not None:
+            inj = self._injector
+            if inj.take(self._round, "slow"):
+                # straggler round: the sleep sits inside the watchdog's
+                # timed window, so the round must be flagged
+                time.sleep(inj.slow_s)
+            if inj.take(self._round, "poison_prefill"):
+                # the next prefill launch NaNs one real row's logits; the
+                # host-sync guard must fail exactly that request
+                self._poison_pending = True
+            if inj.take(self._round, "exhaust_pool"):
+                # transient pool exhaustion for this round: grab only the
+                # *unreserved* headroom — residents' reservations stay
+                # backed (their lazy allocations must not start failing),
+                # but admission sees zero admittable pages
+                n = self.cache.free_blocks - self.cache.reserved_blocks
+                chaos_pages = [
+                    self.cache.allocator.alloc() for _ in range(max(0, n))
+                ]
+        try:
+            self._admit()
+            if self.prefill_chunk is not None:
+                self._prefill_pending()
+            self._decode_active()
+        finally:
+            if chaos_pages:
+                # never written: no scrub needed now; a later tenant scrubs
+                # them through the normal fresh-page path
+                self.cache.allocator.free(chaos_pages)
+            if self._watchdog is not None:
+                self._watchdog.observe(self._round, time.monotonic() - t0)
+            self._round += 1
 
     def _kv_len(self, r: Request) -> int:
-        return len(r.prompt) + r.max_new_tokens - 1
+        # park/resume: `prompt` absorbs emitted tokens, so subtract them
+        # from the output budget — the total stays len(P0) + max_new - 1
+        return len(r.prompt) + (r.max_new_tokens - len(r.done_tokens)) - 1
 
     def _admit(self) -> None:
         t0 = self._obs_clock() if self._obs_tracer is not None else 0.0
+        self._expire_queued()
         admitted: List[tuple] = []
+        blocked = False  # pool pressure (not SLO deferral) stalled the head
         for slot in range(self.max_slots):
-            if self.slots[slot] is not None or not self.queue:
+            if self.slots[slot] is not None:
                 continue
-            r = self.queue[0]
+            r = self._next_candidate()
+            if r is None:
+                break
+            if self._itl_defer(r):
+                break
             if not self.cache.can_admit(self._kv_len(r), r.prompt):
+                blocked = True
                 break  # FIFO: don't let short requests starve the head
             self.queue.popleft()
             r.prefilled = self.cache.admit(
                 r.rid, self._kv_len(r), prompt=r.prompt
             )
+            if r.was_parked:
+                r.was_parked = False
+                self._stats["resumed_requests"] += 1
+                if self._obs_metrics is not None:
+                    self._obs_metrics.counter(
+                        "serve.requests.resumed", unit="events"
+                    ).inc()
             self.slots[slot] = r
             admitted.append((slot, r))
+        if self.sla is not None:
+            if blocked and self.queue:
+                self._degrade()
+            elif not self.queue and self.degradation_level:
+                # backlog drained: restore full capability (DESIGN.md §17)
+                self._relax()
         if self._obs_tracer is not None and admitted:
             t1 = self._obs_clock()
             for slot, r in admitted:
@@ -343,6 +497,270 @@ class Scheduler:
                 if self._finished(r):
                     self._evict(slot)
             self._free_window_pages()  # long prompts may already out-span it
+
+    # ------------------------------------------------------------------
+    # overload resilience (DESIGN.md §17): deadlines, SLO gates, the
+    # degradation ladder, park/resume, and the page-conservation audit
+    # ------------------------------------------------------------------
+    def _terminate(self, r: Request, status: RequestStatus) -> None:
+        """Terminal bookkeeping for a request that ends off-slot (shed,
+        expired, preempted-for-good, failed): its tokens so far become the
+        result, exactly one status is recorded, and the lifecycle
+        collectors see a finish with the status as the reason."""
+        self.results[r.rid] = np.asarray(r.all_out, np.int32)
+        self.statuses[r.rid] = status
+        self.request_peaks[r.rid] = r.peak_blocks
+        self._stats[f"{status.value}_requests"] += 1
+        if self._obs_tracer is not None:
+            self._obs_tracer.on_finish(r.rid, status.value)
+        if self._obs_metrics is not None:
+            self._obs_metrics.counter(
+                f"serve.requests.{status.value}", unit="requests"
+            ).inc()
+
+    def _expire_queued(self) -> None:
+        """Drop queued requests whose deadline has passed — at admission
+        time, before they can consume pool pages. A never-admitted request
+        expires empty (EXPIRED); a parked one keeps the tokens it emitted
+        before preemption (PREEMPTED)."""
+        if not any(r.deadline_t is not None for r in self.queue):
+            return
+        now = self._clock()
+        alive: collections.deque = collections.deque()
+        dropped = 0
+        for r in self.queue:
+            if r.deadline_t is not None and now >= r.deadline_t:
+                self._terminate(
+                    r,
+                    RequestStatus.PREEMPTED if r.parks
+                    else RequestStatus.EXPIRED,
+                )
+                dropped += 1
+            else:
+                alive.append(r)
+        if dropped:
+            self.queue = alive
+            if self._obs_metrics is not None:
+                self._obs_metrics.gauge(
+                    "serve.queue_depth", unit="requests"
+                ).set(len(self.queue))
+
+    def _next_candidate(self) -> Optional[Request]:
+        """The queue head, after shedding heads that can no longer meet
+        the TTFT SLO: time already waited plus the predicted prefill wall
+        time (when a bound RoofLens is installed) past `ttft_slo_s` means
+        admitting would only burn pages on a guaranteed miss — the
+        admitted population then meets the SLO by construction. Resumed
+        requests already delivered their first token and are exempt."""
+        shed_gate = self.sla is not None and self.sla.ttft_slo_s is not None
+        while self.queue:
+            r = self.queue[0]
+            if not shed_gate or r.done_tokens:
+                return r
+            pred = 0.0
+            lens = self._obs_rooflens
+            if lens is not None and getattr(lens, "_bound", False):
+                bs = self.cache.block_size
+                span = math.ceil(max(1, len(r.prompt)) / bs) * bs
+                pred = lens.predict_prefill(1, span)
+            if not self.sla.ttft_breached(self._clock() - r.submit_t, pred):
+                return r
+            self.queue.popleft()
+            self._terminate(r, RequestStatus.SHED)
+            if self._obs_metrics is not None:
+                self._obs_metrics.gauge(
+                    "serve.queue_depth", unit="requests"
+                ).set(len(self.queue))
+        return None
+
+    def _itl_defer(self, cand: Request) -> bool:
+        """Roofline-driven admission gate: defer the candidate while the
+        predicted per-token time of one decode chunk over (residents +
+        candidate) breaches the ITL SLO — the marginal-contention question
+        the calibrated 3D roofline can answer *before* the batch slows
+        down. Inert without a bound RoofLens (the `prefill_sla_s`
+        template), and never defers onto an idle batch: a lone request
+        must always make progress."""
+        if self.sla is None or self.sla.itl_slo_s is None:
+            return False
+        lens = self._obs_rooflens
+        if lens is None or not getattr(lens, "_bound", False):
+            return False
+        resident = [
+            float(r.next_pos) for r in self.slots
+            if r is not None and r.out
+        ]
+        if not resident:
+            return False
+        steps = max(1, self.chunk)
+        pred = lens.predict_decode_chunk(
+            resident + [float(len(cand.prompt) + 1)], steps
+        )
+        if not self.sla.itl_breached(pred, steps):
+            return False
+        self._stats["itl_deferrals"] += 1
+        if self._obs_metrics is not None:
+            self._obs_metrics.counter(
+                "serve.admission.itl_deferrals", unit="events"
+            ).inc()
+        return True
+
+    def _degrade(self) -> None:
+        """Escalate one applicable rung of the degradation ladder (slo.
+        LADDER, strictly in order) in a round where the pool blocked the
+        queue head. Rungs the engine build lacks (no prefix index, no spec
+        decode, monolithic prefill) are skipped within the same call; the
+        final rung — park the lowest-priority resident — may repeat on
+        later blocked rounds, since one eviction may not free enough."""
+        head = self.queue[0]
+        applied = None
+        while self.degradation_level < len(LADDER) and applied is None:
+            rung = LADDER[self.degradation_level]
+            self.degradation_level += 1
+            if rung == "prefix_evict":
+                if self.cache.prefix is not None:
+                    need = self.cache.blocks_for(self._kv_len(head))
+                    if self.cache.prefix.evict(need) > 0:
+                        applied = rung
+            elif rung == "spec_off":
+                if self._spec is not None and self._spec_enabled:
+                    applied = rung
+                self._spec_enabled = False
+            elif rung == "prefill_shrink":
+                if self.prefill_chunk is not None and not self._span_shrunk:
+                    applied = rung
+                self._span_shrunk = True
+            elif self._park_lowest(head):
+                applied = rung
+        if applied is None and self.degradation_level >= len(LADDER):
+            if self._park_lowest(head):
+                applied = LADDER[-1]
+        if applied is not None:
+            self._stats["degradations"] += 1
+            if self._obs_metrics is not None:
+                self._obs_metrics.counter(
+                    "serve.degradations", unit="events"
+                ).inc()
+                self._obs_metrics.gauge(
+                    "serve.degradation_level", unit="rungs"
+                ).set(self.degradation_level)
+
+    def _relax(self) -> None:
+        """De-escalate the whole ladder once the queue drains: speculative
+        rounds and the full prefill span come back (parked requests have
+        already re-queued themselves; index pages are simply gone)."""
+        self.degradation_level = 0
+        self._spec_enabled = True
+        self._span_shrunk = False
+        if self._obs_metrics is not None:
+            self._obs_metrics.gauge(
+                "serve.degradation_level", unit="rungs"
+            ).set(0)
+
+    def _park_lowest(self, cand: Request) -> bool:
+        """Park the lowest-priority resident strictly below the blocked
+        head's priority (ties: youngest first — the oldest keeps its
+        progress). False when no resident may be preempted for this head."""
+        victims = [
+            (i, r) for i, r in enumerate(self.slots)
+            if r is not None and r.priority < cand.priority
+        ]
+        if not victims:
+            return False
+        slot, _ = min(victims, key=lambda t: (t[1].priority, -t[1].rid))
+        self._park(slot)
+        return True
+
+    def _park(self, slot: int) -> None:
+        """Preempt one resident: index its written history into the prefix
+        cache (when installed), release its pages and reservation through
+        `PagedKVCache.park`, fold its emitted tokens into the prompt, and
+        re-queue it at the tail for a later re-prefill. Sampling keys ride
+        the *global* output index (`Request.emitted`), so the resumed
+        request's remaining tokens are bit-identical to an uninterrupted
+        run — the resume prefill's sample IS its next output token."""
+        r = self.slots[slot]
+        if r.out:
+            # KV in the pool covers positions [0, next_pos - 1): the whole
+            # prompt plus every emitted token except the last (whose KV is
+            # written by the decode step that feeds it back)
+            written = np.concatenate(
+                [r.prompt, np.asarray(r.out[:-1], np.int32)]
+            )
+        else:
+            written = r.prompt[:r.prefilled]  # mid-prefill victim
+        self.cache.park(r.rid, written)
+        if r.out:
+            r.done_tokens += r.out
+            r.prompt = np.concatenate(
+                [r.prompt, np.asarray(r.out, np.int32)]
+            )
+            r.out = []
+        r.prefilled = 0
+        r.parks += 1
+        r.was_parked = True
+        self.slots[slot] = None
+        self.queue.append(r)
+        self._stats["parked_requests"] += 1
+        if self._obs_metrics is not None:
+            self._obs_metrics.counter(
+                "serve.requests.parked", unit="events"
+            ).inc()
+            self._publish_gauges()
+
+    def _fail(self, slot: int, r: Request) -> None:
+        """Fail exactly one request at the host-sync guard: reclaim its
+        pages, clear its slot, record status FAILED. Its poisoned pages
+        never enter the prefix index (the guard runs before
+        `prefix_insert`), so co-batched survivors stay bit-identical."""
+        self.cache.release(r.rid)
+        self.slots[slot] = None
+        self._terminate(r, RequestStatus.FAILED)
+        if self._obs_metrics is not None:
+            self._publish_gauges()
+
+    def check_invariants(self) -> Dict[str, int]:
+        """Page-conservation audit (DESIGN.md §17): every allocator page is
+        either free or held; every held page's refcount equals exactly the
+        number of resident block-table references plus prefix-index pins;
+        reservations never exceed the free list. Raises RuntimeError on any
+        violation (these are the invariants the hypothesis batteries check
+        per-op; this is the live-engine spot check the chaos harness and
+        the overload benchmark run at drain). Returns the occupancy
+        snapshot so callers can assert drain-state on top."""
+        alloc = self.cache.allocator
+        if alloc.free_count + alloc.used_count != self.cache.num_blocks:
+            raise RuntimeError(
+                f"page leak: free {alloc.free_count} + used "
+                f"{alloc.used_count} != pool {self.cache.num_blocks}"
+            )
+        holders: Dict[int, int] = {}
+        for r in self.slots:
+            if r is None:
+                continue
+            for p in self.cache.held_pages(r.rid):
+                holders[p] = holders.get(p, 0) + 1
+        if self.cache.prefix is not None:
+            for p in self.cache.prefix.page_multiset():
+                holders[p] = holders.get(p, 0) + 1
+        if alloc.used_count != len(holders):
+            raise RuntimeError(
+                f"orphaned pages: allocator holds {alloc.used_count} unique "
+                f"pages but residents + prefix index account for "
+                f"{len(holders)}"
+            )
+        for p, c in holders.items():
+            if alloc.ref_count(p) != c:
+                raise RuntimeError(
+                    f"refcount drift on page {p}: allocator says "
+                    f"{alloc.ref_count(p)}, holders say {c}"
+                )
+        if self.cache.reserved_blocks > alloc.free_count:
+            raise RuntimeError(
+                f"reservations ({self.cache.reserved_blocks}) exceed the "
+                f"free list ({alloc.free_count})"
+            )
+        return self.cache.occupancy()
 
     def _prefill_pending(self) -> None:
         """Chunked prefill (DESIGN.md §15): advance every mid-prefill slot
@@ -379,6 +797,11 @@ class Scheduler:
         one — constant predicted stall on the interleaved decode stream
         instead of constant token count. Never returns less than one page
         (progress must be possible even over budget)."""
+        if self._span_shrunk:
+            # degradation rung "prefill_shrink" (DESIGN.md §17): one page
+            # per chunk — prefill keeps making progress but stops competing
+            # with the blocked queue head for pool pages
+            return min(self.prefill_chunk, self.cache.block_size)
         if (
             self.prefill_sla_s is None
             or self._obs_rooflens is None
@@ -458,6 +881,7 @@ class Scheduler:
         tables = np.zeros((b, tw), np.int32)
         last_idx = np.zeros(b, np.int32)
         rids = np.full(b, -1, np.int64)
+        steps0 = np.zeros(b, np.int64)
         completing: List[tuple] = []  # (row, slot, r) sampling their 1st token
         for row, (slot, r, start, n) in enumerate(rows):
             tokens[row, :n] = r.prompt[start:start + n]
@@ -469,6 +893,10 @@ class Scheduler:
             if r.prefilled >= len(r.prompt):
                 last_idx[row] = n - 1
                 rids[row] = r.rid
+                # a resume prefill's sample is the request's next *global*
+                # output token, so it keys on the banked count — this is
+                # what makes park/resume bit-identical (DESIGN.md §17)
+                steps0[row] = len(r.done_tokens)
                 completing.append((row, slot, r))
         copies = self.cache.drain_copies(b)
         fresh_rows = self.cache.drain_fresh_rows(b * pages)
@@ -492,14 +920,37 @@ class Scheduler:
             tokens, positions, tables, write_slots, write_pos, fresh_rows[0],
             copies, last_idx,
         )
-        toks = self._sample(logits, rids, np.zeros(b, np.int64))
+        if self._poison_pending and completing:
+            # chaos "poison_prefill" (DESIGN.md §17): NaN one real row's
+            # logits before sampling — the guard below must fail exactly
+            # this request and leave its batch-mates untouched
+            import jax.numpy as jnp
+            self._poison_pending = False
+            logits = jnp.asarray(logits).at[completing[0][0]].set(jnp.nan)
+        failed_rows: set = set()
+        if self._guard_nonfinite and completing:
+            import jax.numpy as jnp
+            finite = np.asarray(
+                jnp.all(jnp.isfinite(jnp.asarray(logits)), axis=-1)
+            )
+            failed_rows = {
+                row for row, _, _ in completing if not bool(finite[row])
+            }
+        toks = self._sample(logits, rids, steps0)
         # `toks` is host-side: the sample call above was the device->host
         # sync, so t1 - t0 is the full prefill wall time incl. sampling
         t1 = self._obs_clock() if observing else 0.0
         for row, slot, r in completing:
+            if row in failed_rows:
+                # ordered before out/prefix_insert: a poisoned request
+                # never emits a token and never seeds the prefix index
+                self._fail(slot, r)
+                continue
             r.out.append(int(toks[row]))
             self.cache.prefix_insert(r.rid, r.prompt)
         for row, (slot, r, start, n) in enumerate(rows):
+            if row in failed_rows:
+                continue  # released: its pages are already reclaimed
             r.peak_blocks = max(r.peak_blocks, self.cache.blocks_held(r.rid))
 
         st = self._stats
@@ -513,7 +964,9 @@ class Scheduler:
             # TTFT attribution: a request's first-token timestamp is the
             # completing chunk's sync — mid-prefill chunks don't emit one
             self._obs_tracer.on_prefill(
-                t0, t1, [r.rid for _, _, r in completing], b, sp
+                t0, t1,
+                [r.rid for row, _, r in completing if row not in failed_rows],
+                b, sp,
             )
         if self._obs_rooflens is not None:
             if bounded:
@@ -544,7 +997,7 @@ class Scheduler:
         # the prefill launch that caused them drains them — decode writing
         # a shared page would mean the plan in PagedKVCache._plan is wrong
         assert self.cache.pending_copies == 0, "unflushed CoW copies at decode"
-        if self._spec is not None:
+        if self._spec is not None and self._spec_enabled:
             self._decode_active_spec(active)
         elif self.chunk > 1:
             self._decode_active_chunked(active)
@@ -570,7 +1023,7 @@ class Scheduler:
             tables[i] = self.cache.block_table_row(r.rid, mb)
             kv_lens[i] = r.next_pos  # incl. the token this step writes
             rids[i] = r.rid
-            steps[i] = len(r.out)
+            steps[i] = r.emitted  # global output index: park/resume invariant
         fresh = self.cache.drain_fresh(m)
         observing = (
             self._obs_tracer is not None or self._obs_rooflens is not None
@@ -604,7 +1057,7 @@ class Scheduler:
         host request state (EOS / length caps are also computed on device;
         the replay only decides how many of the C tokens each slot keeps)."""
         m, mb, bs = self.max_slots, self.max_blocks, self.cache.block_size
-        rem = {i: r.max_new_tokens - len(r.out) for i, r in active}
+        rem = {i: r.max_new_tokens - r.emitted for i, r in active}
         c = min(self.chunk, _pow2ceil(max(rem.values())))
         f = m * ((c + bs - 1) // bs + 1)  # fresh-page bound for the chunk
 
@@ -630,7 +1083,7 @@ class Scheduler:
             si = min(c, rem[i])
             tokens0[i, 0] = r.out[-1]
             rids[i] = r.rid
-            start_steps[i] = len(r.out)
+            start_steps[i] = r.emitted  # sampling keys ride the global index
             max_steps[i] = si
             act[i] = True
             if r.eos_id is not None:
@@ -668,7 +1121,7 @@ class Scheduler:
                 r.out.append(int(toks[j, i]))
                 if self._finished(r):
                     break
-            steps_taken[i] = len(r.out) - int(start_steps[i])
+            steps_taken[i] = r.emitted - int(start_steps[i])
             r.peak_blocks = max(r.peak_blocks, self.cache.blocks_held(r.rid))
 
         self._account_decode_chunk(active, steps_taken, used0, held0, p0s, c)
@@ -696,7 +1149,7 @@ class Scheduler:
         m, bs = self.max_slots, self.cache.block_size
         k, rounds = self.spec_k, self.spec_rounds
         cap = rounds * (k + 1)
-        rem = {i: r.max_new_tokens - len(r.out) for i, r in active}
+        rem = {i: r.max_new_tokens - r.emitted for i, r in active}
 
         used0 = self.cache.allocator.used_count
         held0 = {i: self.cache.blocks_held(r.rid) for i, r in active}
@@ -716,7 +1169,7 @@ class Scheduler:
             tokens0[i, 0] = r.out[-1]
             p0[i] = pos0
             rids[i] = r.rid
-            start_steps[i] = len(r.out)
+            start_steps[i] = r.emitted  # global index, park/resume invariant
             max_steps[i] = si
             act[i] = True
             if r.eos_id is not None:
@@ -1000,7 +1453,9 @@ class Scheduler:
         self._stats["window_freed_pages"] += freed
 
     def _finished(self, r: Request) -> bool:
-        return len(r.out) >= r.max_new_tokens or (
+        # `emitted` counts the whole life incl. banked pre-park tokens, so
+        # a resumed request's length cap is unchanged by the interruption
+        return r.emitted >= r.max_new_tokens or (
             r.eos_id is not None and r.out and r.out[-1] == r.eos_id
         )
 
@@ -1011,7 +1466,8 @@ class Scheduler:
             # request here in one round; the second visit is a no-op (the
             # cache release below is likewise idempotent)
             return
-        self.results[r.rid] = np.asarray(r.out, np.int32)
+        self.results[r.rid] = np.asarray(r.all_out, np.int32)
+        self.statuses[r.rid] = RequestStatus.OK
         self.request_peaks[r.rid] = r.peak_blocks
         self.cache.release(r.rid)
         self.slots[slot] = None
@@ -1025,6 +1481,9 @@ class Scheduler:
             self._obs_metrics.counter(
                 "serve.requests.finished", unit="requests"
             ).inc()
+            # queue_depth / pool gauges refresh at eviction too, not only
+            # at submit and admission — an idle-tail drain stays observable
+            self._publish_gauges()
 
     # ------------------------------------------------------------------
     # occupancy / padding-waste report

@@ -395,13 +395,17 @@ def test_prefix_sharing_conserves_pool_and_refcounts(
     assert occ["used"] == occ["cached"] == cache.prefix.pages
 
 
-# op stream for the speculative-decode battery (PR 8): admit one of a
-# family of overlapping prompts, append (prefill writes, then the spec
-# round's preallocating write_slots), rollback (rejected drafts rewind the
-# request to its committed length), or evict — so rollback runs against
-# tables that also hold prefix-shared and CoW-cloned pages
+# op stream for the speculative-decode + preemption battery (PR 8/PR 9):
+# admit one of a family of overlapping prompts (or re-admit a parked
+# request's folded history through the prefix index), append (prefill
+# writes, then the spec round's preallocating write_slots), rollback
+# (rejected drafts rewind the request to its committed length), park (the
+# §17 preemption: index the written history, release pages + reservation),
+# or evict — so rollback and park both run against tables that also hold
+# prefix-shared and CoW-cloned pages
 _ROPS = st.lists(
-    st.tuples(st.sampled_from(["admit", "append", "rollback", "evict"]),
+    st.tuples(st.sampled_from(["admit", "append", "rollback", "park",
+                               "evict"]),
               st.integers(0, 7), st.integers(1, 9)),
     min_size=1, max_size=60,
 )
@@ -410,15 +414,19 @@ _ROPS = st.lists(
 @settings(max_examples=50, deadline=None)
 @given(ops=_ROPS, num_blocks=st.integers(8, 24), block_size=st.integers(1, 6))
 def test_spec_rollback_conserves_pool_and_refcounts(ops, num_blocks, block_size):
-    """Speculative-decode rollback conservation: random accept/reject
-    sequences (modeled as append-then-rollback, as the scheduler's spec
-    round preallocates the draft span and rewinds rejects) keep free +
-    unique-allocated equal to the pool size and every page's refcount equal
-    to its live-table holders plus index references — including when the
-    rolled-back request's table holds prefix-shared pages and CoW clones.
-    Rollback only ever trims decode-tail pages (the scheduler never rewinds
-    below the prompt), credits the admission reservation so the request can
-    re-grow, and never disturbs sibling or index references."""
+    """Speculative-decode rollback + park/re-admit conservation: random
+    accept/reject sequences (modeled as append-then-rollback, as the
+    scheduler's spec round preallocates the draft span and rewinds rejects)
+    interleaved with random preemption (park releases a live table after
+    indexing its written history; a later admit re-enters the folded
+    history through the prefix index) keep free + unique-allocated equal to
+    the pool size and every page's refcount equal to its live-table holders
+    plus index references — including when the rolled-back or parked
+    request's table holds prefix-shared pages and CoW clones. Rollback only
+    ever trims decode-tail pages (the scheduler never rewinds below the
+    prompt), credits the admission reservation so the request can re-grow,
+    and never disturbs sibling or index references; park drops the
+    reservation entirely."""
     bs = block_size
     cache = PagedKVCache(
         _PoolStub(), num_blocks=num_blocks, block_size=bs, prefix_cache=True
@@ -430,15 +438,40 @@ def test_spec_rollback_conserves_pool_and_refcounts(ops, num_blocks, block_size)
         list(range(300, 300 + 2 * bs + 1)),
     ]
     live = {}  # rid -> [prompt, kv_len budget, tokens written, inserted]
+    parked = []  # folded written histories awaiting re-admission
     next_rid = 0
     for kind, pick, n in ops:
         if kind == "admit":
-            prompt = prompts[pick % len(prompts)]
+            # alternate between fresh prompts and re-admitting a parked
+            # request's folded history (the §17 resume path: the history
+            # should largely prefix-hit the pages park just indexed)
+            if parked and pick % 2:
+                prompt = parked[pick % len(parked)]
+            else:
+                prompt = prompts[pick % len(prompts)]
             kv_len = len(prompt) + n
-            if cache.can_admit(kv_len, prompt):
+            if (kv_len <= num_blocks * bs
+                    and cache.can_admit(kv_len, prompt)):
                 hit = cache.admit(next_rid, kv_len, prompt=prompt)
+                if prompt in parked:
+                    parked.remove(prompt)
                 live[next_rid] = [prompt, kv_len, hit, False]
                 next_rid += 1
+        elif kind == "park" and live:
+            rid = sorted(live)[pick % len(live)]
+            prompt, _, written, _ = live[rid]
+            # decode tokens past the prompt get synthetic stable values so
+            # the folded history can prefix-hit on re-admission
+            history = (prompt + [10_000 + rid * 97 + j
+                                 for j in range(written - len(prompt))]
+                       )[:written]
+            reserved_before = cache.reserved_blocks
+            cache.park(rid, history)
+            assert rid not in cache._tables  # table gone, not just empty
+            assert cache.reserved_blocks <= reserved_before
+            if len(history) >= bs:
+                parked.append(history)
+            del live[rid]
         elif kind == "append" and live:
             rid = sorted(live)[pick % len(live)]
             prompt, kv_len, written, inserted = live[rid]

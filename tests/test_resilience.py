@@ -1,0 +1,351 @@
+"""Overload-resilience tests (DESIGN.md §17): SLO admission control and
+bounded queues, deadline shedding with explicit terminal statuses,
+park/resume preemption with bit-identical outputs, the serving chaos
+harness (pool exhaustion / straggler rounds / poisoned prefills), and the
+page-conservation audit. The common thread: overload and faults downgrade
+individual requests — never the engine, and never a surviving request's
+tokens."""
+import numpy as np
+import pytest
+import jax
+
+from repro.configs.base import get_smoke_config
+from repro.dist.fault import FaultInjector, StragglerWatchdog, SERVING_FAULTS
+from repro.models.model import Model
+from repro.obs import MetricsRegistry, Observability
+from repro.serve.engine import GenerationEngine
+from repro.serve.paged_cache import BlockAllocator
+from repro.serve.slo import LADDER, RequestStatus, SLAPolicy
+
+
+class FakeClock:
+    """Injectable monotonic clock: advances only when told. Deadlines and
+    TTFT gates become deterministic instead of wall-clock-dependent."""
+
+    def __init__(self, t: float = 100.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def tick(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = get_smoke_config("llama3-8b")
+    m = Model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _prompts(vocab, lengths, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, n).astype(np.int32) for n in lengths]
+
+
+def _engine(llama, **kw):
+    m, params = llama
+    kw.setdefault("max_len", 64)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("decode_chunk", 4)
+    return GenerationEngine(m, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# SLAPolicy: pure-predicate semantics
+# ---------------------------------------------------------------------------
+
+def test_slapolicy_validates_and_predicates():
+    for bad in (dict(ttft_slo_s=0), dict(itl_slo_s=-1.0), dict(max_queue=0)):
+        with pytest.raises(ValueError):
+            SLAPolicy(**bad)
+    p = SLAPolicy(max_queue=2)
+    assert p.queue_full(2) and p.queue_full(3) and not p.queue_full(1)
+    # unset objectives never gate
+    none = SLAPolicy()
+    assert not none.queue_full(10**6)
+    assert not none.ttft_breached(1e9) and not none.itl_breached(1e9, 1)
+    assert SLAPolicy(ttft_slo_s=1.0).ttft_breached(0.5, 0.6)
+    assert not SLAPolicy(ttft_slo_s=1.0).ttft_breached(0.5, 0.4)
+    assert SLAPolicy(itl_slo_s=0.1).itl_breached(0.9, 4)
+    assert not SLAPolicy(itl_slo_s=0.1).itl_breached(0.2, 4)
+    assert LADDER == ("prefix_evict", "spec_off", "prefill_shrink", "park")
+    assert set(SERVING_FAULTS) == {"slow", "exhaust_pool", "poison_prefill"}
+
+
+def test_fault_injector_take_consumes_once():
+    inj = FaultInjector({3: "exhaust_pool"})
+    assert not inj.take(3, "slow")  # wrong kind: not consumed
+    assert inj.take(3, "exhaust_pool")
+    assert not inj.take(3, "exhaust_pool")  # at most once per (step, kind)
+    assert not inj.take(4, "exhaust_pool")
+
+
+# ---------------------------------------------------------------------------
+# allocator error paths the resilience layer leans on
+# ---------------------------------------------------------------------------
+
+def test_allocator_exhaustion_error_names_admission():
+    """The exhaustion error is a loud invariant violation, not a condition
+    callers are meant to catch: admission control must make it unreachable,
+    and the message says so."""
+    a = BlockAllocator(1)
+    a.alloc()
+    with pytest.raises(RuntimeError, match="admission should prevent this"):
+        a.alloc()
+    assert a.free_count == 0 and a.used_count == 1  # state survives the raise
+
+
+def test_allocator_incref_rejects_unallocated_and_foreign_blocks():
+    """incref on a free or out-of-range block is always a caller bug (only
+    prefix hits and index pins incref, and both hold live references)."""
+    a = BlockAllocator(2)
+    b0 = a.alloc()
+    a.incref(b0)
+    with pytest.raises(ValueError, match="incref on unallocated block"):
+        a.incref(b0 + 1)  # still on the free list
+    with pytest.raises(ValueError, match="incref on unallocated block"):
+        a.incref(99)  # out of range entirely
+    assert a.ref_count(b0) == 2  # failed increfs didn't disturb live state
+    a.free([b0])  # 2 -> 1: still allocated
+    assert a.free([b0]) == [b0]  # 1 -> 0: actually freed
+    with pytest.raises(ValueError, match="incref on unallocated block"):
+        a.incref(b0)  # back on the free list: pinning it again is a bug
+    assert a.free_count == 2
+
+
+# ---------------------------------------------------------------------------
+# bounded queue + statuses + deadline shedding
+# ---------------------------------------------------------------------------
+
+def test_bounded_queue_sheds_at_submit_and_serves_the_rest(llama):
+    vocab = llama[0].cfg.vocab_size
+    prompts = _prompts(vocab, (5, 9, 7, 6))
+    obs = Observability(metrics=MetricsRegistry())
+    eng = _engine(llama, max_slots=1,
+                  sla=SLAPolicy(max_queue=2), obs=obs)
+    rids = [eng.submit(p, max_new_tokens=4) for p in prompts]
+    # nothing admitted yet: the first two queue, the rest shed at submit
+    assert eng.statuses[rids[2]] == RequestStatus.SHED
+    assert eng.statuses[rids[3]] == RequestStatus.SHED
+    res = eng.run_until_drained()
+    assert set(res) == set(rids)  # every rid has an explicit result
+    assert eng.statuses[rids[0]] == eng.statuses[rids[1]] == RequestStatus.OK
+    assert len(res[rids[2]]) == 0 and len(res[rids[3]]) == 0
+    # the served requests are bit-identical to a policy-free engine
+    clean_eng = _engine(llama, max_slots=1)
+    for i in range(2):
+        rid = clean_eng.submit(prompts[i], max_new_tokens=4)
+        np.testing.assert_array_equal(
+            clean_eng.run_until_drained()[rid], res[rids[i]]
+        )
+    # satellite: the queue-depth gauge is fresh at drain (eviction updates
+    # it, not just submit) and the shed counter matches the statuses
+    assert obs.metrics.gauge("serve.queue_depth", unit="requests").value == 0
+    assert obs.metrics.counter(
+        "serve.requests.shed", unit="requests").value == 2
+    assert eng.scheduler.stats()["shed_requests"] == 2
+    eng.scheduler.check_invariants()
+
+
+def test_deadline_expires_queued_request(llama):
+    vocab = llama[0].cfg.vocab_size
+    pa, pb, pc = _prompts(vocab, (6, 8, 5))
+    clk = FakeClock()
+    eng = _engine(llama, max_slots=1, obs=Observability(clock=clk))
+    a = eng.submit(pa, max_new_tokens=6)
+    b = eng.submit(pb, max_new_tokens=6, deadline_s=5.0)
+    c = eng.submit(pc, max_new_tokens=6, deadline_s=500.0)
+    clk.tick(10.0)  # b's budget passes while it is still queued
+    res = eng.run_until_drained()
+    assert eng.statuses[b] == RequestStatus.EXPIRED and len(res[b]) == 0
+    assert eng.statuses[a] == RequestStatus.OK and len(res[a]) == 6
+    assert eng.statuses[c] == RequestStatus.OK and len(res[c]) == 6
+    eng.scheduler.check_invariants()
+    # audit catches drift: an out-of-band page grab is an orphan
+    eng.kv.allocator.alloc()
+    with pytest.raises(RuntimeError, match="orphaned"):
+        eng.scheduler.check_invariants()
+
+
+def test_ttft_gate_sheds_stale_heads(llama):
+    vocab = llama[0].cfg.vocab_size
+    pa, pb, pc = _prompts(vocab, (5, 7, 9))
+    clk = FakeClock()
+    eng = _engine(llama, max_slots=1, sla=SLAPolicy(ttft_slo_s=5.0),
+                  obs=Observability(clock=clk))
+    a = eng.submit(pa, max_new_tokens=4)
+    b = eng.submit(pb, max_new_tokens=4)
+    c = eng.submit(pc, max_new_tokens=4)
+    eng.scheduler.step()  # a admitted within budget (waited 0s) and served
+    clk.tick(10.0)  # b and c have now waited past the TTFT SLO
+    res = eng.run_until_drained()
+    assert eng.statuses[a] == RequestStatus.OK and len(res[a]) == 4
+    for rid in (b, c):
+        assert eng.statuses[rid] == RequestStatus.SHED and len(res[rid]) == 0
+    assert eng.scheduler.stats()["shed_requests"] == 2
+    eng.scheduler.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# park / resume: preemption with bit-identical outputs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_park_resume_outputs_bit_identical(llama, temperature):
+    """A low-priority resident parked for a high-priority arrival must
+    resume and finish with exactly the tokens an unpressured run produces —
+    greedy and keyed-temperature sampling alike (the sampling keys ride the
+    request's global output index across the interruption)."""
+    vocab = llama[0].cfg.vocab_size
+    pa, pb = _prompts(vocab, (17, 33))
+    # 8-page pool: a (4 pages) resident blocks b (6 pages) -> the ladder
+    # skips prefix_evict (a's indexed pages are still shared), spec_off and
+    # prefill_shrink (neither installed), and parks a
+    kw = dict(max_slots=2, num_blocks=8, prefix_cache=True,
+              temperature=temperature, sla=SLAPolicy(max_queue=8))
+    eng = _engine(llama, **kw)
+    a = eng.submit(pa, max_new_tokens=16, priority=0)
+    eng.scheduler.step()  # a resident: 4 pages reserved of 16
+    b = eng.submit(pb, max_new_tokens=16, priority=1)  # needs 6 pages
+    # drive rounds until the pool pressure parks a for b, then drain
+    res = eng.run_until_drained()
+    st = eng.scheduler.stats()
+    assert st["parked_requests"] >= 1 and st["resumed_requests"] >= 1
+    assert st["degradations"] >= 1
+    assert eng.scheduler.degradation_level == 0  # relaxed after the drain
+    assert eng.statuses[a] == eng.statuses[b] == RequestStatus.OK
+    assert len(res[a]) == 16 and len(res[b]) == 16
+    eng.scheduler.check_invariants()
+
+    solo = _engine(llama, **kw)
+    sa = solo.submit(pa, max_new_tokens=16, priority=0)
+    np.testing.assert_array_equal(solo.run_until_drained()[sa], res[a])
+    sb_eng = _engine(llama, **kw)
+    sb_eng.submit(np.asarray([1], np.int32), max_new_tokens=1)  # burn rid 0
+    sb = sb_eng.submit(pb, max_new_tokens=16, priority=1)
+    np.testing.assert_array_equal(sb_eng.run_until_drained()[sb], res[b])
+
+
+def test_parked_request_expiring_keeps_partial_output(llama):
+    """PREEMPTED vs EXPIRED: a parked request whose deadline passes before
+    resume keeps the tokens it emitted before preemption."""
+    vocab = llama[0].cfg.vocab_size
+    pa, pb = _prompts(vocab, (17, 33))
+    clk = FakeClock()
+    eng = _engine(llama, max_slots=2, num_blocks=8,
+                  sla=SLAPolicy(max_queue=8), obs=Observability(clock=clk))
+    a = eng.submit(pa, max_new_tokens=16, priority=0, deadline_s=50.0)
+    eng.scheduler.step()
+    n_before = len(eng.scheduler.slots[0].out)
+    assert n_before >= 1  # a has emitted at least its first token
+    b = eng.submit(pb, max_new_tokens=16, priority=1)
+    eng.scheduler.step()  # pool pressure parks a (ladder's final rung)
+    assert eng.scheduler.stats()["parked_requests"] == 1
+    clk.tick(100.0)  # a's deadline passes while it waits parked
+    res = eng.run_until_drained()
+    assert eng.statuses[a] == RequestStatus.PREEMPTED
+    assert len(res[a]) >= n_before  # partial output survives
+    assert eng.statuses[b] == RequestStatus.OK and len(res[b]) == 16
+    assert eng.scheduler.stats()["preempted_requests"] == 1
+    eng.scheduler.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# roofline-driven ITL deferral
+# ---------------------------------------------------------------------------
+
+def test_itl_gate_defers_admission_but_never_deadlocks(llama):
+    """An unmeetable ITL SLO serializes the batch (each candidate waits for
+    the residents to drain) but can never stall a lone request — every
+    request still completes OK."""
+    vocab = llama[0].cfg.vocab_size
+    prompts = _prompts(vocab, (5, 7, 6))
+    obs = Observability.default()  # binds a RoofLens -> predictions gate
+    eng = _engine(llama, max_slots=2, obs=obs,
+                  sla=SLAPolicy(itl_slo_s=1e-12))
+    # asymmetric lifetimes: the short request frees its slot while the
+    # long one still decodes, so the third candidate faces a busy batch
+    lens = (16, 6, 6)
+    rids = [eng.submit(p, max_new_tokens=n)
+            for p, n in zip(prompts, lens)]
+    res = eng.run_until_drained()
+    st = eng.scheduler.stats()
+    assert st["itl_deferrals"] >= 1
+    for rid, n in zip(rids, lens):
+        assert eng.statuses[rid] == RequestStatus.OK and len(res[rid]) == n
+    # a generous SLO admits freely: no deferrals on the same workload
+    eng2 = _engine(llama, max_slots=2, obs=Observability.default(),
+                   sla=SLAPolicy(itl_slo_s=1e6))
+    for p, n in zip(prompts, lens):
+        eng2.submit(p, max_new_tokens=n)
+    eng2.run_until_drained()
+    assert eng2.scheduler.stats()["itl_deferrals"] == 0
+
+
+# ---------------------------------------------------------------------------
+# serving chaos harness
+# ---------------------------------------------------------------------------
+
+def test_chaos_fails_only_poisoned_request_survivors_bit_identical(llama):
+    """Seeded fault schedule through a full drain: the poisoned prefill
+    fails exactly its own request (FAILED, pages reclaimed, nothing in the
+    prefix index), pool exhaustion stalls a round without killing anything,
+    and every surviving request's tokens equal the fault-free run's."""
+    vocab = llama[0].cfg.vocab_size
+    # the poisoned prompt spans a full page (10 > block_size) so the
+    # prefix-index assertion below is meaningful
+    prompts = _prompts(vocab, (10, 9, 7, 5, 8))
+    plan = {0: "poison_prefill", 2: "exhaust_pool", 4: "slow"}
+    inj = FaultInjector(plan, slow_s=0.01)
+    wd = StragglerWatchdog()
+    eng = _engine(llama, max_slots=2, prefix_cache=True,
+                  injector=inj, watchdog=wd)
+    rids = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    res = eng.run_until_drained()  # zero engine-fatal exceptions
+
+    # round 0 admits rids 0 and 1 and poisons the first completing row
+    assert eng.statuses[rids[0]] == RequestStatus.FAILED
+    assert len(res[rids[0]]) == 0
+    assert eng.scheduler.stats()["failed_requests"] == 1
+    # the poisoned prompt never seeded the prefix index
+    assert eng.kv.prefix.lookup(prompts[0]) == []
+    # every scheduled fault actually fired
+    assert {(s, k) for s, k in inj.fired} == set(plan.items())
+    assert wd.report()["n_steps"] >= 5  # one observation per round
+    eng.scheduler.check_invariants()
+
+    clean = _engine(llama, max_slots=2, prefix_cache=True)
+    crids = [clean.submit(p, max_new_tokens=6) for p in prompts]
+    cres = clean.run_until_drained()
+    for i in range(1, len(prompts)):
+        assert clean.statuses[crids[i]] == RequestStatus.OK
+        np.testing.assert_array_equal(cres[crids[i]], res[rids[i]])
+
+
+def test_exhaust_pool_round_is_transient_and_conserving(llama):
+    """The exhaust-pool fault grabs only unreserved headroom for one round:
+    residents keep decoding through it, admission resumes next round, and
+    the pool conserves pages at drain."""
+    vocab = llama[0].cfg.vocab_size
+    prompts = _prompts(vocab, (6, 7, 8))
+    inj = FaultInjector({1: "exhaust_pool", 2: "exhaust_pool"})
+    eng = _engine(llama, max_slots=1, injector=inj)
+    rids = [eng.submit(p, max_new_tokens=5) for p in prompts]
+    res = eng.run_until_drained()
+    for rid in rids:
+        assert eng.statuses[rid] == RequestStatus.OK and len(res[rid]) == 5
+    occ = eng.scheduler.check_invariants()
+    assert occ["used"] == 0 and occ["free"] == eng.kv.num_blocks
+
+
+def test_nonfinite_guard_off_without_resilience(llama):
+    """With neither sla nor injector the guard never arms — the hot path
+    stays exactly the pre-resilience one."""
+    eng = _engine(llama)
+    assert not eng.scheduler._guard_nonfinite
+    eng2 = _engine(llama, sla=SLAPolicy(max_queue=4))
+    assert eng2.scheduler._guard_nonfinite
