@@ -15,6 +15,11 @@ Design points for 1000+-node scale:
     thread, costing one device->host copy, not a step stall;
   * restore is layout-elastic: arrays are saved UNSHARDED (global view) so a
     restart may use a different mesh/device count (elastic re-mesh).
+
+`save_snapshot` / `load_snapshot` expose the same durability idiom
+(manifest-written-last, tmp+rename, bf16 stored as raw bits) as a generic
+one-shot directory format — the serving engine's crash-safe prefix/session
+snapshot (DESIGN.md §18) rides on it.
 """
 from __future__ import annotations
 
@@ -54,6 +59,57 @@ def _unflatten(flat: Dict[str, np.ndarray], like: Any) -> Any:
         return flat["/".join(path)]
 
     return rec((), like)
+
+
+def save_snapshot(directory: str, arrays: Dict[str, np.ndarray],
+                  meta: Dict[str, Any]) -> None:
+    """Write one atomic snapshot directory: `arrays` (flat str->ndarray)
+    into arrays.npz plus a `meta` dict into a manifest.json that is written
+    last — a snapshot without a manifest is incomplete and `load_snapshot`
+    refuses it, so a kill at any point leaves either the old snapshot or
+    none, never a torn one."""
+    tmp = directory + ".tmp"
+    shutil.rmtree(tmp, ignore_errors=True)
+    os.makedirs(tmp, exist_ok=True)
+    stored = {}
+    dtypes = {}
+    for k, v in arrays.items():
+        v = np.asarray(v)
+        dtypes[k] = v.dtype.name
+        # npz can't represent ml_dtypes (bf16, fp8): store raw bits and
+        # re-view on load, same as the training checkpoints
+        if v.dtype.name == "bfloat16":
+            v = v.view(np.uint16)
+        stored[k.replace("/", "§")] = v
+    np.savez(os.path.join(tmp, "arrays.npz"), **stored)
+    manifest = {"meta": meta, "dtypes": dtypes}
+    with open(os.path.join(tmp, "manifest.json.tmp"), "w") as f:
+        json.dump(manifest, f)
+    os.rename(
+        os.path.join(tmp, "manifest.json.tmp"),
+        os.path.join(tmp, "manifest.json"),
+    )
+    shutil.rmtree(directory, ignore_errors=True)
+    os.rename(tmp, directory)  # atomic publish
+
+
+def load_snapshot(directory: str) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    """Read a `save_snapshot` directory back as (arrays, meta). Raises
+    FileNotFoundError when the directory holds no complete snapshot."""
+    if not os.path.exists(os.path.join(directory, "manifest.json")):
+        raise FileNotFoundError(f"no complete snapshot under {directory}")
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays: Dict[str, np.ndarray] = {}
+    with np.load(os.path.join(directory, "arrays.npz")) as z:
+        for k in z.files:
+            arrays[k.replace("§", "/")] = z[k]
+    import ml_dtypes
+
+    for k, dt in manifest["dtypes"].items():
+        if dt == "bfloat16" and k in arrays:
+            arrays[k] = arrays[k].view(ml_dtypes.bfloat16)
+    return arrays, manifest["meta"]
 
 
 class Checkpointer:

@@ -493,6 +493,33 @@ def kv_codec_names() -> Tuple[str, ...]:
     return tuple(n for n in codec_names() if _REGISTRY[n].kv_capable)
 
 
+# Stable numeric codec ids for binary headers (host-tier page payloads,
+# checkpoint manifests). These are a wire format: ids are append-only and
+# never reused — a new codec takes the next free id, a retired codec keeps
+# its slot. Id 0 is the unquantized pool ("none" is not a registry codec).
+_WIRE_IDS: Dict[str, int] = {
+    "none": 0, "bf16": 1, "bf8": 2, "mxfp4": 3, "int8": 4, "int4": 5,
+    "nf4": 6,
+}
+_WIRE_NAMES: Dict[int, str] = {v: k for k, v in _WIRE_IDS.items()}
+
+
+def codec_wire_id(name: str) -> int:
+    try:
+        return _WIRE_IDS[name]
+    except KeyError:
+        raise ValueError(
+            f"codec {name!r} has no wire id; known: {sorted(_WIRE_IDS)}"
+        ) from None
+
+
+def codec_from_wire_id(wire_id: int) -> str:
+    try:
+        return _WIRE_NAMES[wire_id]
+    except KeyError:
+        raise ValueError(f"unknown codec wire id {wire_id}") from None
+
+
 register(BF16Codec())
 register(BF8Codec())
 register(MXFP4Codec())

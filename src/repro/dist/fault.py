@@ -27,12 +27,17 @@ class InjectedFault(RuntimeError):
 
 
 #: Fault kinds the serving scheduler consumes via `take` (DESIGN.md §17).
-#: "slow" is shared with the training path; the other two only make sense
+#: "slow" is shared with the training path; the others only make sense
 #: inside the scheduler loop: "exhaust_pool" grabs the pool's unreserved
 #: headroom for one round (admission sees zero admittable pages, residents'
 #: reservations stay backed), "poison_prefill" overwrites one prefill row's
-#: logits with NaN so the host-sync guard must fail exactly that request.
-SERVING_FAULTS = ("slow", "exhaust_pool", "poison_prefill")
+#: logits with NaN so the host-sync guard must fail exactly that request,
+#: and "corrupt_tier_page" flips bytes in one stored host-tier payload
+#: (DESIGN.md §18) so the checksum-verified restore path must fall back to
+#: recompute for exactly the affected prefix — never a crash, never a
+#: wrong token.
+SERVING_FAULTS = ("slow", "exhaust_pool", "poison_prefill",
+                  "corrupt_tier_page")
 
 
 class FaultInjector:

@@ -44,7 +44,8 @@ _ACT_BYTES = 2  # bf16
 
 @dataclasses.dataclass
 class _Sample:
-    regime: str       # 'prefill' | 'prefill_chunk' | 'decode' | 'draft' | 'verify'
+    regime: str       # 'prefill' | 'prefill_chunk' | 'decode' | 'draft' |
+                      # 'verify' | 'tier_restore'
     codec: str        # 'w=<spec>,kv=<quant>' traffic-shape key
     raw_pred_s: float  # unscaled roofline prediction
     measured_s: float
@@ -294,6 +295,20 @@ class RoofLens:
             vector_ops=per_round_vops, n_chips=self.n_chips,
         )
 
+    def _raw_tier_restore(self, n_pages: int, page_bytes: float) -> float:
+        """Host-tier page restore (DESIGN.md §18): a pure upload — the
+        packed payload bytes cross host->HBM and land in the pool planes,
+        no compute worth counting. Priced as an HBM-bytes-only step so the
+        TTFT admission gate can add restore time to the prefill prediction;
+        its time constant (PCIe/DMA-dominated, host-staged on CPU CI) is
+        nothing like the launch regimes', hence its own calibration scale."""
+        self._require_bound()
+        return rs.surface_step_time(
+            self.profile, flops=0.0,
+            hbm_bytes=float(n_pages) * float(page_bytes), vector_ops=0.0,
+            n_chips=self.n_chips,
+        )
+
     def predict_prefill(self, batch_rows: int, span: int) -> float:
         """Calibrated predicted wall seconds for one bucketed prefill."""
         return self._raw_prefill(batch_rows, span) * self.scale.get(
@@ -321,6 +336,13 @@ class RoofLens:
         `predict_decode` (one decode chunk is one decode chunk); the alias
         exists so the admission call site names the question it asks."""
         return self.predict_decode(kv_lens, steps)
+
+    def predict_tier_restore(self, n_pages: int, page_bytes: float) -> float:
+        """Calibrated predicted wall seconds to restore `n_pages` tier
+        payloads of `page_bytes` each into HBM pages."""
+        return self._raw_tier_restore(n_pages, page_bytes) * self.scale.get(
+            "tier_restore", 1.0
+        )
 
     def predict_draft(self, kv_lens: Sequence[float], k: int,
                       rounds: int = 1) -> float:
@@ -354,6 +376,13 @@ class RoofLens:
     def observe_decode(self, kv_lens: Sequence[float], steps: int,
                        measured_s: float) -> None:
         self._record("decode", self._raw_decode(kv_lens, steps), measured_s)
+
+    def observe_tier_restore(self, n_pages: int, page_bytes: float,
+                             measured_s: float) -> None:
+        self._record(
+            "tier_restore", self._raw_tier_restore(n_pages, page_bytes),
+            measured_s,
+        )
 
     def observe_spec(self, kv_lens: Sequence[float], k: int, rounds: int,
                      measured_s: float) -> None:
@@ -401,7 +430,8 @@ class RoofLens:
         """Fit one measured/raw scale per regime (median — robust to the
         first-call compile outlier) and apply it to future predictions.
         Returns the fitted scales; regimes with no samples are untouched."""
-        for regime in ("prefill", "prefill_chunk", "decode", "draft", "verify"):
+        for regime in ("prefill", "prefill_chunk", "decode", "draft",
+                       "verify", "tier_restore"):
             ratios = sorted(
                 s.measured_s / s.raw_pred_s
                 for s in self.samples

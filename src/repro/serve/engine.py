@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.dist import sharding as sh
 from repro.models.model import Model
+from repro.serve.host_tier import HostTier, apply_page_planes
 from repro.serve.paged_cache import PagedKVCache
 from repro.serve.scheduler import Scheduler
 
@@ -303,6 +304,18 @@ class GenerationEngine:
     `StragglerWatchdog` into the scheduler round loop (the serving chaos
     harness). All three require the paged engine; terminal per-request
     statuses surface through `GenerationEngine.statuses`.
+
+    `host_tier` (DESIGN.md §18) installs a host-memory KV tier under the
+    prefix cache: pool pressure *spills* cold cached pages (quantized
+    payloads + CRC32C checksums) instead of dropping them, admission
+    restores tier-resident prefix hits with a verified device upload
+    before the first prefill round, and the degradation ladder gains a
+    `spill` rung before `park`. Pass `True` for an unbounded tier or a
+    configured `HostTier`; requires `prefix_cache=True` and the paged
+    engine. `snapshot()` / `restore()` ride on the tier to persist the
+    prefix index, tier payloads, and parked-session state across process
+    death — a restarted engine keeps tenants warm and resumes parked
+    sessions bit-identically.
     """
 
     def __init__(
@@ -330,6 +343,7 @@ class GenerationEngine:
         sla=None,
         injector=None,
         watchdog=None,
+        host_tier: Union[bool, HostTier, None] = None,
     ):
         if kv_quant is not None and kv_quant != model.cfg.kv_quant:
             # end-to-end kv_quant plumbing: the format name is a codec-
@@ -365,6 +379,7 @@ class GenerationEngine:
         self.draft_params = draft_params
         self.max_len = max_len
         self.temperature = temperature
+        self._seed = seed
         self._base_key = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(make_prefill_step(model, cache_len=max_len))
         self._decode = jax.jit(make_decode_step(model))
@@ -386,6 +401,13 @@ class GenerationEngine:
                 "sla / injector / watchdog require the paged engine "
                 "(the dense ring cache has no admission loop to gate)"
             )
+        self.tier: Optional[HostTier] = None
+        if host_tier:
+            if not self.paged:
+                raise ValueError("host_tier requires the paged engine")
+            self.tier = (
+                host_tier if isinstance(host_tier, HostTier) else HostTier()
+            )
         self.scheduler: Optional[Scheduler] = None
         if self.paged:
             self.block_size = block_size
@@ -395,6 +417,7 @@ class GenerationEngine:
             self.kv = PagedKVCache(
                 model, num_blocks=num_blocks, block_size=block_size,
                 kv_quant=self.kv_quant, prefix_cache=prefix_cache,
+                tier=self.tier,
             )
             if mesh is not None:
                 ctx = sh.ShardingCtx(mesh, fsdp=fsdp, mode="serve")
@@ -454,6 +477,9 @@ class GenerationEngine:
                 sla=sla,
                 injector=injector,
                 watchdog=watchdog,
+                tier_restore_fn=(
+                    self._run_tier_restore if self.tier is not None else None
+                ),
             )
 
     def _mesh_scope(self):
@@ -555,6 +581,22 @@ class GenerationEngine:
             self.kv.pools = self._paged_scrub(
                 self.kv.pools, jnp.asarray(pages, jnp.int32)
             )
+
+    def _run_tier_restore(self, dev_pages, planes_list):
+        """Upload verified tier payloads into their reserved HBM pages
+        (DESIGN.md §18). Eager `.at[].set` scatter, mirroring the
+        out-of-step scrub: it runs *before* the jitted launch that reads
+        the pages, and under a mesh the updated pools are re-placed with
+        their original shardings (the eager op would otherwise decide its
+        own layout)."""
+        with self._mesh_scope():
+            old = self.kv.pools
+            new = apply_page_planes(old, dev_pages, planes_list)
+            if self.mesh is not None:
+                new = jax.tree.map(
+                    lambda n, o: jax.device_put(n, o.sharding), new, old
+                )
+            self.kv.pools = new
 
     def _run_paged_decode(
         self, tokens, positions, tables, slots, wpos, fresh, kv_lens
@@ -662,6 +704,201 @@ class GenerationEngine:
         if not self.paged:
             raise RuntimeError("request-level API requires the paged engine")
         return self.scheduler.run_until_drained()
+
+    # ------------------------------------------------------------------
+    # crash-safe persistence (DESIGN.md §18)
+    # ------------------------------------------------------------------
+    def _require_tiered(self, what: str) -> None:
+        if not self.paged or self.kv.prefix is None or self.tier is None:
+            raise RuntimeError(
+                f"{what} requires the paged engine with prefix_cache=True "
+                "and a host_tier (the snapshot format is the tier's "
+                "content-addressed payloads)"
+            )
+
+    def snapshot(self, directory: str) -> Dict[str, int]:
+        """Persist the engine's warm state to `directory`, atomically
+        (manifest-written-last): every resident is parked (emitted tokens
+        fold into its prompt, exactly the overload-preemption path), every
+        index page spills into the host tier as a checksummed payload, and
+        the radix index structure + tier payloads + queued/parked request
+        metadata + the sampling-stream configuration go to disk through
+        `checkpoint.ckpt.save_snapshot`. A fresh engine constructed with
+        the same model/codec/seed/temperature restores all of it with
+        `restore()` and resumes parked sessions bit-identically — the
+        `fold_in(rid, global_output_index)` key stream extends across
+        process death because rids, banked token counts, and the base seed
+        all survive. The live engine stays usable afterwards (its cached
+        pages are now tier-resident; the next hit restores them).
+
+        Returns {"nodes": ..., "requests": ...} counts."""
+        self._require_tiered("snapshot")
+        from repro.checkpoint.ckpt import save_snapshot
+
+        sched = self.scheduler
+        for slot in range(sched.max_slots):
+            if sched.slots[slot] is not None:
+                sched._park(slot)
+        self.kv.spill_all()
+        # DFS parent-first: a child's record index is always greater than
+        # its parent's, so restore can rebuild top-down in one pass
+        prefix, tier = self.kv.prefix, self.tier
+        payloads = tier.state()
+        arrays: Dict[str, np.ndarray] = {}
+        node_meta = []
+        order: Dict[int, int] = {id(prefix._root): -1}
+        stack = [prefix._root]
+        while stack:
+            n = stack.pop()
+            for c in n.children.values():
+                i = len(node_meta)
+                order[id(c)] = i
+                p = payloads[c.key]
+                arrays[f"node/{i}/chunk"] = np.frombuffer(c.chunk, np.uint8)
+                arrays[f"node/{i}/blob"] = np.frombuffer(p.blob, np.uint8)
+                node_meta.append({
+                    "parent": order[id(n)],
+                    "tick": c.tick,
+                    "codec": p.codec,
+                    "wire_id": p.wire_id,
+                    "planes": [
+                        [path, list(shape), dt] for path, shape, dt in p.planes
+                    ],
+                    "nbytes": p.nbytes,
+                    "crc": p.crc,
+                })
+                stack.append(c)
+        req_meta = []
+        for j, r in enumerate(sched.queue):
+            arrays[f"req/{j}/prompt"] = np.asarray(r.prompt, np.int32)
+            arrays[f"req/{j}/done"] = np.asarray(r.done_tokens, np.int32)
+            req_meta.append({
+                "rid": r.rid,
+                "max_new_tokens": r.max_new_tokens,
+                "eos_id": r.eos_id,
+                "priority": r.priority,
+                "parks": r.parks,
+                "was_parked": r.was_parked,
+            })
+        # finished-but-undrained results survive the crash too: a session
+        # whose tokens were computed but never fetched is still a session
+        statuses = {}
+        for rid, toks in sched.results.items():
+            arrays[f"res/{rid}"] = np.asarray(toks, np.int32)
+            statuses[str(rid)] = sched.statuses[rid].value
+        meta = {
+            "version": 1,
+            "kv_quant": self.kv_quant or "none",
+            "block_size": self.block_size,
+            "seed": self._seed,
+            "temperature": self.temperature,
+            "max_len": self.max_len,
+            "next_rid": sched._next_rid,
+            "tick": prefix._tick,
+            "nodes": node_meta,
+            "requests": req_meta,
+            "results": statuses,
+        }
+        save_snapshot(directory, arrays, meta)
+        return {"nodes": len(node_meta), "requests": len(req_meta)}
+
+    def restore(self, directory: str) -> Dict[str, int]:
+        """Load a `snapshot()` into this freshly constructed engine: the
+        radix prefix index is rebuilt with every node *tiered* (zero HBM
+        cost — tenants are warm immediately, pages restore lazily on their
+        first hit), the tier refills with the saved payloads (corruption
+        included verbatim: a damaged payload degrades to recompute at
+        admission, exactly as it would have pre-crash), and parked/queued
+        sessions re-enter the queue under their original rids so their
+        sampling-key streams continue where they stopped. Raises
+        ValueError when the engine's codec/block size/seed/temperature
+        disagree with the snapshot — resumed outputs could not be
+        bit-identical."""
+        self._require_tiered("restore")
+        from repro.checkpoint.ckpt import load_snapshot
+        from repro.serve.host_tier import TierPayload, chain_key
+        from repro.serve.paged_cache import _RadixNode
+        from repro.serve.scheduler import Request
+
+        arrays, meta = load_snapshot(directory)
+        if meta.get("version") != 1:
+            raise ValueError(
+                f"unsupported snapshot version {meta.get('version')!r}"
+            )
+        for field, mine in (
+            ("kv_quant", self.kv_quant or "none"),
+            ("block_size", self.block_size),
+            ("seed", self._seed),
+            ("temperature", self.temperature),
+            ("max_len", self.max_len),
+        ):
+            if meta[field] != mine:
+                raise ValueError(
+                    f"snapshot {field} mismatch: saved {meta[field]!r}, "
+                    f"this engine has {mine!r} — resumed outputs would "
+                    "not be bit-identical"
+                )
+        prefix, tier, sched = self.kv.prefix, self.tier, self.scheduler
+        if (
+            prefix.pages or prefix.tiered_count or sched.queue
+            or any(r is not None for r in sched.slots)
+        ):
+            raise RuntimeError(
+                "restore requires a fresh engine (empty prefix index, "
+                "tier, and queue)"
+            )
+        if (
+            tier.capacity_pages is not None
+            and tier.capacity_pages < len(meta["nodes"])
+        ):
+            raise ValueError(
+                f"tier capacity ({tier.capacity_pages} pages) is smaller "
+                f"than the snapshot ({len(meta['nodes'])} pages)"
+            )
+        built: list = []
+        for i, nm in enumerate(meta["nodes"]):
+            parent = prefix._root if nm["parent"] < 0 else built[nm["parent"]]
+            chunk = arrays[f"node/{i}/chunk"].tobytes()
+            node = _RadixNode(
+                chunk, None, parent, nm["tick"],
+                key=chain_key(parent.key, chunk),
+            )
+            parent.children[chunk] = node
+            prefix._tiered += 1
+            built.append(node)
+            tier.put(node.key, TierPayload(
+                codec=nm["codec"],
+                wire_id=nm["wire_id"],
+                planes=tuple(
+                    (path, tuple(shape), dt) for path, shape, dt in nm["planes"]
+                ),
+                nbytes=nm["nbytes"],
+                crc=nm["crc"],
+                blob=arrays[f"node/{i}/blob"].tobytes(),
+            ))
+        prefix._tick = meta["tick"]
+        now = sched._clock()
+        for j, rm in enumerate(meta["requests"]):
+            r = Request(
+                rm["rid"],
+                np.asarray(arrays[f"req/{j}/prompt"], np.int32),
+                rm["max_new_tokens"],
+                rm["eos_id"],
+                priority=rm["priority"],
+                submit_t=now,
+            )
+            r.done_tokens = [int(t) for t in arrays[f"req/{j}/done"]]
+            r.parks = rm["parks"]
+            r.was_parked = rm["was_parked"]
+            sched.queue.append(r)
+        from repro.serve.slo import RequestStatus
+
+        for rid_s, status in meta.get("results", {}).items():
+            rid = int(rid_s)
+            sched.results[rid] = np.asarray(arrays[f"res/{rid}"], np.int32)
+            sched.statuses[rid] = RequestStatus(status)
+        sched._next_rid = max(sched._next_rid, meta["next_rid"])
+        return {"nodes": len(meta["nodes"]), "requests": len(meta["requests"])}
 
     # ------------------------------------------------------------------
     # batch API (thin wrapper over the scheduler when paged)

@@ -1,0 +1,310 @@
+"""Host memory tier for spilled KV pages (DESIGN.md §18).
+
+DECA's premise is that weights and KV live in memory *compressed* and are
+decompressed on the way into the compute engine; this module exploits the
+same representation as a durable, spillable wire format. A tiered page
+leaves HBM as exactly the codec registry's packed planes — quantized codes
+plus scale planes plus the position plane — 4-8x smaller than bf16 KV, with
+a per-page header carrying the codec id, per-plane shapes/dtypes, payload
+length, and a CRC32C checksum. Restoring a page is a checksum-verified
+device upload, never a recompute; a corrupt or missing payload degrades to
+recompute (the caller drops the prefix-index subtree and prefills), never
+a crash and never a wrong token.
+
+Tier keys are content addresses: a radix-index node's key is
+`blake2b(parent_key + chunk_bytes)`, and because attention is causal the
+root-to-node chunk path uniquely determines the page's KV content. Keys
+therefore survive process restarts and transfer between engines — the
+snapshot/restore path (engine.snapshot) reuses them verbatim.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+import jax
+
+# Page axis of each pool plane, from the *end* — so the same index works for
+# a single-layer pool (page axis 0) and the uniform stacked pool (leading L
+# axis, page axis 1). Shapes per models/layers.init_paged_kv_cache:
+#   kp/vp  (..., num_blocks+1, block_size, Hkv, width)
+#   ppos   (..., num_blocks+1, block_size)
+#   ks/vs  (..., num_blocks+1, block_size, Hkv)
+PLANE_PAGE_AXIS: Dict[str, int] = {
+    "kp": -4, "vp": -4, "ppos": -2, "ks": -3, "vs": -3,
+}
+
+
+# ---------------------------------------------------------------------------
+# CRC32C (Castagnoli) — table-driven, pure python, no new dependency
+# ---------------------------------------------------------------------------
+
+def _make_crc32c_table() -> Tuple[int, ...]:
+    poly = 0x82F63B78  # reflected Castagnoli polynomial
+    table = []
+    for i in range(256):
+        c = i
+        for _ in range(8):
+            c = (c >> 1) ^ poly if c & 1 else c >> 1
+        table.append(c)
+    return tuple(table)
+
+
+_CRC32C_TABLE = _make_crc32c_table()
+
+
+def crc32c(data: bytes, crc: int = 0) -> int:
+    """CRC32C checksum (the iSCSI/storage polynomial, e.g.
+    crc32c(b"123456789") == 0xE3069283). Pure python: payload integrity at
+    spill/restore scale, not a bandwidth-critical path."""
+    c = ~crc & 0xFFFFFFFF
+    for b in data:
+        c = (c >> 8) ^ _CRC32C_TABLE[(c ^ b) & 0xFF]
+    return ~c & 0xFFFFFFFF
+
+
+def chain_key(parent_key: bytes, chunk: bytes) -> bytes:
+    """Content address of a radix-index node: hash of the parent's key and
+    this node's token-chunk bytes. The root's key is b""."""
+    return hashlib.blake2b(parent_key + chunk, digest_size=16).digest()
+
+
+# ---------------------------------------------------------------------------
+# page payloads: header + packed plane bytes
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TierPayload:
+    """One spilled page: self-describing header + concatenated plane bytes.
+
+    `planes` lists (path, shape, dtype-name) in blob order, where path is
+    the pool-tree path of the plane (e.g. "kp", or "3/vs" for a
+    non-uniform stack) — enough to re-scatter the blob into any pool of the
+    same geometry. `crc` is CRC32C over the blob; `codec` names the KV
+    codec whose packed representation the planes carry ("none" for an
+    unquantized pool) and `wire_id` is its stable numeric id."""
+
+    codec: str
+    wire_id: int
+    planes: Tuple[Tuple[str, Tuple[int, ...], str], ...]
+    nbytes: int
+    crc: int
+    blob: bytes
+
+
+def _dtype_from_name(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def pack_payload(planes: Dict[str, np.ndarray], codec: str) -> TierPayload:
+    """Pack one page's pool planes (page axis already sliced away) into a
+    checksummed payload. Plane order is sorted-by-path, so identical
+    content always packs to identical bytes."""
+    from repro.core.codecs import codec_wire_id
+
+    header: List[Tuple[str, Tuple[int, ...], str]] = []
+    parts: List[bytes] = []
+    for path in sorted(planes):
+        a = np.ascontiguousarray(planes[path])
+        header.append((path, tuple(a.shape), a.dtype.name))
+        parts.append(a.tobytes())
+    blob = b"".join(parts)
+    return TierPayload(
+        codec=codec,
+        wire_id=codec_wire_id(codec),
+        planes=tuple(header),
+        nbytes=len(blob),
+        crc=crc32c(blob),
+        blob=blob,
+    )
+
+
+def unpack_payload(payload: TierPayload) -> Optional[Dict[str, np.ndarray]]:
+    """Verify the checksum and unpack the blob back into per-plane arrays.
+    Returns None on any integrity failure (length or CRC mismatch) — the
+    caller falls back to recompute; corruption is never an exception."""
+    if len(payload.blob) != payload.nbytes:
+        return None
+    if crc32c(payload.blob) != payload.crc:
+        return None
+    out: Dict[str, np.ndarray] = {}
+    off = 0
+    for path, shape, dtype_name in payload.planes:
+        dt = _dtype_from_name(dtype_name)
+        n = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
+        out[path] = np.frombuffer(
+            payload.blob[off:off + n], dtype=dt
+        ).reshape(shape)
+        off += n
+    if off != payload.nbytes:
+        return None
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pool <-> payload plumbing (shared by spill, restore, and snapshot)
+# ---------------------------------------------------------------------------
+
+def _iter_planes(pools: Dict[str, Any]) -> Iterator[Tuple[str, str, Any]]:
+    """(path, plane-name, leaf) over a pool tree — either a flat plane dict
+    (uniform models: stacked leading L axis) or a {layer-index: plane dict}
+    nest (non-uniform stacks)."""
+    for k in sorted(pools):
+        v = pools[k]
+        if isinstance(v, dict):
+            for k2 in sorted(v):
+                yield f"{k}/{k2}", k2, v[k2]
+        else:
+            yield k, k, v
+
+
+def _page_index(leaf_ndim: int, plane: str, pages) -> Tuple:
+    ax = PLANE_PAGE_AXIS[plane] % leaf_ndim
+    return (slice(None),) * ax + (pages,)
+
+
+def extract_page_planes(pools: Dict[str, Any], dev_page: int) -> Dict[str, np.ndarray]:
+    """Pull one device page's slice of every pool plane to host memory,
+    keyed by tree path, page axis removed."""
+    out: Dict[str, np.ndarray] = {}
+    for path, plane, leaf in _iter_planes(pools):
+        idx = _page_index(leaf.ndim, plane, dev_page)
+        out[path] = np.asarray(jax.device_get(leaf[idx]))
+    return out
+
+
+def apply_page_planes(
+    pools: Dict[str, Any],
+    dev_pages: np.ndarray,
+    planes_list: List[Dict[str, np.ndarray]],
+) -> Dict[str, Any]:
+    """Upload restored payload planes into the pool at `dev_pages` (device
+    page ids, parallel to `planes_list`). Returns the updated pool tree —
+    the caller reassigns it under its mesh scope, mirroring the scrub
+    path."""
+    if len(dev_pages) != len(planes_list):
+        raise ValueError(
+            f"{len(dev_pages)} pages != {len(planes_list)} payloads"
+        )
+
+    def update(path: str, plane: str, leaf):
+        stacked = np.stack([pl[path] for pl in planes_list])
+        ax = PLANE_PAGE_AXIS[plane] % leaf.ndim
+        if ax:  # page axis is not leading: move the stack axis into place
+            stacked = np.moveaxis(stacked, 0, ax)
+        idx = _page_index(leaf.ndim, plane, np.asarray(dev_pages, np.int32))
+        return leaf.at[idx].set(stacked.astype(leaf.dtype))
+
+    out: Dict[str, Any] = {}
+    for k in pools:
+        v = pools[k]
+        if isinstance(v, dict):
+            out[k] = {
+                k2: update(f"{k}/{k2}", k2, v[k2]) for k2 in v
+            }
+        else:
+            out[k] = update(k, k, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the tier store
+# ---------------------------------------------------------------------------
+
+class HostTier:
+    """Host-memory store of spilled KV pages, keyed by content address.
+
+    Unbounded by default; with `capacity_pages` set, inserting past
+    capacity drops the least-recently-used payload and notifies `on_drop`
+    (the paged cache uses the hook to prune the now-payload-free index
+    node, keeping the tiered-page audit exact). Lifetime counters feed
+    `Scheduler.stats()`:
+
+      spilled_pages        pages that entered the tier
+      restored_pages       verified payloads uploaded back into HBM pages
+      corrupt_pages        payloads that failed checksum verification
+      dropped_pages        payloads evicted by the capacity bound
+      fallback_recomputes  admissions that recomputed a prefix because a
+                           payload was corrupt or missing
+    """
+
+    def __init__(self, capacity_pages: Optional[int] = None):
+        if capacity_pages is not None and capacity_pages < 1:
+            raise ValueError(f"capacity_pages must be >= 1, got {capacity_pages}")
+        self.capacity_pages = capacity_pages
+        self.on_drop: Optional[Callable[[bytes], None]] = None
+        self._store: "OrderedDict[bytes, TierPayload]" = OrderedDict()
+        self.spilled_pages = 0
+        self.restored_pages = 0
+        self.corrupt_pages = 0
+        self.dropped_pages = 0
+        self.fallback_recomputes = 0
+
+    @property
+    def pages(self) -> int:
+        return len(self._store)
+
+    @property
+    def payload_bytes(self) -> int:
+        return sum(p.nbytes for p in self._store.values())
+
+    def __contains__(self, key: bytes) -> bool:
+        return key in self._store
+
+    def keys(self) -> List[bytes]:
+        return list(self._store)
+
+    def put(self, key: bytes, payload: TierPayload) -> None:
+        self._store[key] = payload
+        self._store.move_to_end(key)
+        self.spilled_pages += 1
+        while (
+            self.capacity_pages is not None
+            and len(self._store) > self.capacity_pages
+        ):
+            victim, _ = self._store.popitem(last=False)
+            self.dropped_pages += 1
+            if self.on_drop is not None:
+                self.on_drop(victim)
+
+    def get(self, key: bytes) -> Optional[TierPayload]:
+        p = self._store.get(key)
+        if p is not None:
+            self._store.move_to_end(key)
+        return p
+
+    def pop(self, key: bytes) -> Optional[TierPayload]:
+        return self._store.pop(key, None)
+
+    def corrupt_one(self) -> Optional[bytes]:
+        """Chaos hook (`corrupt_tier_page`): flip bytes in one stored
+        payload — deterministically the smallest key, so seeded fault
+        schedules replay. The header (and its CRC) is left intact; the next
+        restore attempt *detects* the damage and falls back to recompute.
+        Returns the corrupted key, or None when the tier is empty."""
+        if not self._store:
+            return None
+        key = min(self._store)
+        p = self._store[key]
+        if p.nbytes == 0:
+            # empty blob (device-poolless bookkeeping stub): break the
+            # recorded checksum instead so verification still fails
+            self._store[key] = replace(p, crc=p.crc ^ 0xDEADBEEF)
+            return key
+        blob = bytearray(p.blob)
+        for i in range(min(8, len(blob))):
+            blob[i] ^= 0xFF
+        self._store[key] = replace(p, blob=bytes(blob))
+        return key
+
+    def state(self) -> Dict[bytes, TierPayload]:
+        """Snapshot hook: the stored payloads (insertion order preserved)."""
+        return dict(self._store)

@@ -18,11 +18,16 @@ Split of responsibilities:
                   shared prompt prefixes to physical page ids (DESIGN.md
                   §15). The index holds its own reference on every cached
                   page; LRU leaf eviction reclaims index-only pages when
-                  admission needs headroom.
+                  admission needs headroom. With a host tier installed
+                  (DESIGN.md §18) a node may instead be *tiered* — its page
+                  spilled to host memory as a checksummed quantized payload,
+                  addressed by the node's content key — and admission
+                  restores tiered hits into fresh HBM pages ahead of resume.
   PagedKVCache    block tables + lazy page allocation + admission-
                   reservation accounting + copy-on-write + the flat
                   write-slot / block-table / fresh-page / copy arrays the
-                  jitted steps consume; owns the device pool pytree
+                  jitted steps consume; owns the device pool pytree and
+                  routes index-eviction victims into the host tier
 
 A request at length `len` holds exactly `ceil(len / block_size)` pages —
 never `max_len` — and with the prefix index on, pages holding a prompt
@@ -42,6 +47,14 @@ from typing import Any, Dict, Iterator, List, Optional, Tuple
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+from repro.serve.host_tier import (
+    HostTier,
+    chain_key,
+    extract_page_planes,
+    pack_payload,
+    unpack_payload,
+)
 
 
 class BlockAllocator:
@@ -107,15 +120,23 @@ class BlockAllocator:
 
 
 class _RadixNode:
-    __slots__ = ("chunk", "page", "children", "parent", "tick")
+    __slots__ = ("chunk", "page", "children", "parent", "tick", "key")
 
     def __init__(self, chunk: bytes, page: Optional[int],
-                 parent: Optional["_RadixNode"], tick: int):
+                 parent: Optional["_RadixNode"], tick: int,
+                 key: bytes = b""):
         self.chunk = chunk
         self.page = page
         self.children: Dict[bytes, "_RadixNode"] = {}
         self.parent = parent
         self.tick = tick
+        self.key = key  # content address: chain_key over the root path
+
+    @property
+    def tiered(self) -> bool:
+        """True when this node's page lives in the host tier, not HBM.
+        (The root is the only other page-less node; it has no parent.)"""
+        return self.page is None and self.parent is not None
 
 
 class PrefixIndex:
@@ -126,13 +147,22 @@ class PrefixIndex:
     The index increfs every page it caches, so request eviction never
     drops a cached prefix — pages leave the index (and, at refcount zero,
     return to the pool) only through `evict`, oldest-touched leaves first,
-    and only while no live request shares them."""
+    and only while no live request shares them.
+
+    With a host tier attached (`self.tier`, DESIGN.md §18) a node can be
+    *tiered*: its HBM page spilled to host memory as a checksummed payload
+    keyed by the node's content address, `node.page` set to None. Structural
+    invariant: a resident node never sits below a tiered node — spilling
+    walks leaf-first and restoring walks top-down along the hit chain, so
+    every root-to-node prefix is a resident run followed by a tiered run."""
 
     def __init__(self, block_size: int, allocator: BlockAllocator):
         self.block_size = block_size
         self.allocator = allocator
+        self.tier: Optional[HostTier] = None  # set by PagedKVCache
         self._root = _RadixNode(b"", None, None, 0)
         self._pages = 0
+        self._tiered = 0
         self._tick = 0
 
     def _chunks(self, prompt) -> Iterator[bytes]:
@@ -143,37 +173,89 @@ class PrefixIndex:
 
     @property
     def pages(self) -> int:
-        """Pages the index currently pins (one reference each)."""
+        """HBM pages the index currently pins (one reference each)."""
         return self._pages
 
+    @property
+    def tiered_count(self) -> int:
+        """Nodes whose page currently lives in the host tier."""
+        return self._tiered
+
     def lookup(self, prompt) -> List[int]:
-        """Longest cached full-page prefix of `prompt` -> its page ids, in
-        position order. Touches the matched chain's LRU ticks."""
+        """Longest *HBM-resident* cached full-page prefix of `prompt` ->
+        its page ids, in position order. Touches the matched chain's LRU
+        ticks. Tiered continuations are `lookup_chain`'s business."""
+        return self.lookup_chain(prompt)[0]
+
+    def lookup_chain(self, prompt) -> Tuple[List[int], List[_RadixNode]]:
+        """Longest cached full-page prefix of `prompt`, split into its
+        resident run (page ids, position order) and the contiguous tiered
+        run behind it (nodes whose payloads the tier can restore). Touches
+        the matched chain's LRU ticks."""
         self._tick += 1
-        node, pages = self._root, []
+        node, pages, tiered = self._root, [], []
         for key in self._chunks(prompt):
             child = node.children.get(key)
             if child is None:
                 break
             child.tick = self._tick
-            pages.append(child.page)
+            if child.tiered:
+                tiered.append(child)
+            elif tiered:
+                raise RuntimeError(
+                    "prefix-index corruption: resident node below a tiered "
+                    "node (spill must walk leaf-first)"
+                )
+            else:
+                pages.append(child.page)
             node = child
-        return pages
+        return pages, tiered
+
+    def tiered_hit_pages(self, prompt) -> int:
+        """Restorable tiered pages a `lookup_chain(prompt)` would return,
+        without touching LRU ticks — the scheduler's TTFT admission gate
+        prices the restore traffic with this before committing to admit."""
+        node, n = self._root, 0
+        for key in self._chunks(prompt):
+            child = node.children.get(key)
+            if child is None:
+                break
+            if child.tiered:
+                n += 1
+            node = child
+        return n
 
     def insert(self, prompt, table: List[Optional[int]]) -> int:
         """Cache every full page of a finished prefill: chunks already
         indexed are kept (first writer wins — the later request's identical
         page stays private), new chunks pin the request's page with one
-        index reference. Stops at a window-freed hole (a cached prefix must
-        be contiguous from position 0). Returns pages newly cached."""
+        index reference. A *tiered* node on the path is re-adopted instead:
+        the writer's page carries identical content (same chunk path, causal
+        attention), so the node goes resident on the writer's page and the
+        now-redundant tier payload is dropped — which also preserves the
+        no-resident-below-tiered invariant. Stops at a window-freed hole (a
+        cached prefix must be contiguous from position 0). Returns pages
+        newly pinned."""
         self._tick += 1
         node, added = self._root, 0
         for i, key in enumerate(self._chunks(prompt)):
             child = node.children.get(key)
-            if child is None:
+            if child is not None and child.tiered:
                 if i >= len(table) or table[i] is None:
                     break
-                child = _RadixNode(key, table[i], node, self._tick)
+                child.page = table[i]
+                self.allocator.incref(table[i])
+                self._pages += 1
+                self._tiered -= 1
+                if self.tier is not None:
+                    self.tier.pop(child.key)
+                child.tick = self._tick
+                added += 1
+            elif child is None:
+                if i >= len(table) or table[i] is None:
+                    break
+                child = _RadixNode(key, table[i], node, self._tick,
+                                   key=chain_key(node.key, key))
                 node.children[key] = child
                 self.allocator.incref(table[i])
                 self._pages += 1
@@ -184,16 +266,17 @@ class PrefixIndex:
         return added
 
     def evictable_count(self) -> int:
-        """Pages reclaimable right now: nodes whose whole subtree is held
-        by the index alone (refcount 1) — those evict leaf-first without
-        breaking any cached chain a live request still shares."""
+        """Pages reclaimable right now: resident nodes whose whole subtree
+        is held by the index alone (refcount 1) — those evict (or spill)
+        leaf-first without breaking any cached chain a live request still
+        shares. Tiered nodes hold no HBM page and never block an ancestor."""
         def walk(n: _RadixNode) -> Tuple[int, bool]:
             total, all_free = 0, True
             for c in n.children.values():
                 t, a = walk(c)
                 total += t
                 all_free = all_free and a
-            if n.page is None:  # root
+            if n.page is None:  # root or tiered: no page to reclaim
                 return total, all_free
             if all_free and self.allocator.ref_count(n.page) == 1:
                 return total + 1, True
@@ -201,38 +284,127 @@ class PrefixIndex:
 
         return walk(self._root)[0]
 
+    def _drop_tiered_subtree(self, node: _RadixNode) -> None:
+        """Remove every (tiered) descendant of `node`, dropping its tier
+        payload. Only called where the subtree is known all-tiered: below
+        an eviction/spill frontier node, or on a corrupt payload."""
+        stack = list(node.children.values())
+        node.children.clear()
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            self._tiered -= 1
+            if self.tier is not None:
+                self.tier.pop(n.key)
+
+    def drop_subtree(self, node: _RadixNode) -> None:
+        """Unlink `node` and its whole (all-tiered) subtree from the index
+        — the corrupt/missing-payload fallback: the chain below the damage
+        is unreachable content, so the admission recomputes it."""
+        if not node.tiered:
+            raise ValueError("drop_subtree is the tiered-fallback path only")
+        self._drop_tiered_subtree(node)
+        self._tiered -= 1
+        if self.tier is not None:
+            self.tier.pop(node.key)
+        del node.parent.children[node.chunk]
+
+    def drop_key(self, key: bytes) -> None:
+        """Capacity-drop hook (`HostTier.on_drop`): the tier evicted this
+        payload, so unlink the matching tiered node (and its subtree) to
+        keep the node<->payload correspondence exact."""
+        found = None
+        stack = [self._root]
+        while stack and found is None:
+            n = stack.pop()
+            for c in n.children.values():
+                if c.tiered and c.key == key:
+                    found = c
+                    break
+                stack.append(c)
+        if found is not None:
+            self._drop_tiered_subtree(found)
+            self._tiered -= 1
+            del found.parent.children[found.chunk]
+
+    def restore_node(self, node: _RadixNode, page: int) -> None:
+        """Re-point a tiered node at a freshly allocated HBM page (the
+        caller owns popping the payload and scheduling the device upload).
+        Restores run top-down along a hit chain, so the no-resident-below-
+        tiered invariant is preserved."""
+        if not node.tiered:
+            raise ValueError("restore_node on a resident node")
+        node.page = page
+        self._pages += 1
+        self._tiered -= 1
+
+    def _frontier(self) -> List[_RadixNode]:
+        """Reclaim candidates: resident, index-only (refcount 1), and with
+        no resident descendants — evicting or spilling one never breaks a
+        chain above a page someone still reads from HBM."""
+        out, stack = [], [self._root]
+        while stack:
+            n = stack.pop()
+            resident_kids = False
+            for c in n.children.values():
+                if not c.tiered:
+                    resident_kids = True
+                    stack.append(c)
+            if (n.page is not None and not resident_kids
+                    and self.allocator.ref_count(n.page) == 1):
+                out.append(n)
+        return out
+
     def evict(self, n_pages: int) -> int:
-        """Reclaim up to `n_pages` index-only pages, LRU leaves first
-        (evicting a leaf may expose its parent as the next candidate).
-        Returns pages actually returned to the free list."""
+        """Reclaim up to `n_pages` index-only pages by *dropping* them, LRU
+        frontier first (evicting a node may expose its parent as the next
+        candidate). A dropped node takes its tiered subtree's payloads with
+        it — the chain below would be unreachable. Returns pages actually
+        returned to the free list."""
         freed = 0
         while freed < n_pages:
-            leaves = [
-                n for n in self._leaves()
-                if self.allocator.ref_count(n.page) == 1
-            ]
-            if not leaves:
+            frontier = self._frontier()
+            if not frontier:
                 break
-            leaves.sort(key=lambda n: n.tick)
-            for node in leaves:
+            frontier.sort(key=lambda n: n.tick)
+            for node in frontier:
                 if freed >= n_pages:
                     break
-                if node.children:
-                    continue  # a sibling eviction pass may have re-parented
+                if any(not c.tiered for c in node.children.values()):
+                    continue  # a sibling pass may have changed the frontier
+                self._drop_tiered_subtree(node)
                 del node.parent.children[node.chunk]
                 self._pages -= 1
                 freed += len(self.allocator.free([node.page]))
         return freed
 
-    def _leaves(self) -> List[_RadixNode]:
-        out, stack = [], [self._root]
-        while stack:
-            n = stack.pop()
-            if n.children:
-                stack.extend(n.children.values())
-            elif n.page is not None:
-                out.append(n)
-        return out
+    def spill(self, n_pages: int, extract_fn) -> int:
+        """Reclaim up to `n_pages` index-only pages by spilling them to the
+        host tier instead of dropping them: `extract_fn(page)` packs the
+        page's pool planes into a checksummed payload, the payload is
+        stored under the node's content key, and the HBM page returns to
+        the free list with the node left tiered — the cached prefix
+        survives as host bytes. Same LRU frontier order as `evict`.
+        Returns pages returned to the free list."""
+        if self.tier is None:
+            raise RuntimeError("spill without a host tier installed")
+        freed = 0
+        while freed < n_pages:
+            frontier = self._frontier()
+            if not frontier:
+                break
+            frontier.sort(key=lambda n: n.tick)
+            for node in frontier:
+                if freed >= n_pages:
+                    break
+                if any(not c.tiered for c in node.children.values()):
+                    continue
+                self.tier.put(node.key, extract_fn(node.page))
+                page, node.page = node.page, None
+                self._pages -= 1
+                self._tiered += 1
+                freed += len(self.allocator.free([page]))
+        return freed
 
     def page_multiset(self) -> List[int]:
         """Every page the index holds a reference on, one entry per
@@ -244,6 +416,17 @@ class PrefixIndex:
             stack.extend(n.children.values())
             if n.page is not None:
                 out.append(n.page)
+        return out
+
+    def tier_keys(self) -> List[bytes]:
+        """Content keys of every tiered node — `check_invariants` matches
+        this one-to-one against the tier store's payload keys."""
+        out, stack = [], [self._root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n.tiered:
+                out.append(n.key)
         return out
 
 
@@ -259,6 +442,7 @@ class PagedKVCache:
         dtype=jnp.bfloat16,
         kv_quant: Optional[str] = None,
         prefix_cache: bool = False,
+        tier: Optional[HostTier] = None,
     ):
         self.block_size = block_size
         self.num_blocks = num_blocks
@@ -267,16 +451,28 @@ class PagedKVCache:
         self.pools = model.init_paged_cache(
             num_blocks, block_size, dtype, kv_quant=self.kv_quant
         )
+        if tier is not None and not prefix_cache:
+            raise ValueError(
+                "a host tier requires prefix_cache=True (tiered pages live "
+                "under the prefix index's content keys)"
+            )
         self.prefix: Optional[PrefixIndex] = (
             PrefixIndex(block_size, self.allocator) if prefix_cache else None
         )
+        self.tier = tier
+        if tier is not None:
+            self.prefix.tier = tier
+            tier.on_drop = self.prefix.drop_key
         self._tables: Dict[int, List[Optional[int]]] = {}
         self._reserved: Dict[int, int] = {}
         self._fresh: List[int] = []  # device pages allocated since last drain
         self._pending_copies: List[Tuple[int, int]] = []  # (src, dst) device ids
+        # restored tier payloads awaiting device upload: (device page, planes)
+        self._pending_restores: List[Tuple[int, Dict[str, np.ndarray]]] = []
         # lifetime counters (Scheduler.stats() reports them)
         self.prefix_hit_tokens = 0
         self.cow_copies = 0
+        self.tier_hit_tokens = 0
 
     # -- admission accounting ------------------------------------------------
 
@@ -309,8 +505,11 @@ class PagedKVCache:
         admitted requests but not yet lazily allocated, admittable = free
         minus reserved (the admission-control headroom `can_admit` checks
         against), shared = pages with more than one holder, cached = pages
-        the prefix index pins. The scheduler publishes these as
-        `serve.pool.*` gauges when a metrics registry is installed."""
+        the prefix index pins, tiered = pages spilled to the host tier (the
+        fourth conservation class: their HBM pages are back on the free
+        list, their *content* survives as checksummed host payloads). The
+        scheduler publishes these as `serve.pool.*` gauges when a metrics
+        registry is installed."""
         used = self.allocator.used_count
         free = self.allocator.free_count
         reserved = self.reserved_blocks
@@ -321,33 +520,56 @@ class PagedKVCache:
             "admittable": free - reserved,
             "shared": self.allocator.shared_count,
             "cached": self.prefix.pages if self.prefix is not None else 0,
+            "tiered": self.tier.pages if self.tier is not None else 0,
             "total": self.num_blocks,
             "tables": len(self._tables),
         }
 
-    def _plan(self, kv_len: int, prompt) -> Tuple[List[int], int, int]:
-        """Admission plan: (prefix-hit pages, hit tokens, pages to reserve).
+    def _hit_arithmetic(
+        self, kv_len: int, prompt, n_resident: int, n_tiered: int
+    ) -> Tuple[int, int]:
+        """(hit tokens, pages to reserve) for a hit of `n_resident`
+        resident + `n_tiered` restorable pages.
 
         The hit is capped at `prompt_len - 1` tokens — the last prompt
         token is always recomputed (its logits seed sampling), and when the
         cached pages cover the whole prompt that recompute's KV write lands
         in a shared page, so the plan reserves one extra page for the
         inevitable copy-on-write clone."""
-        hit_pages: List[int] = []
+        total = n_resident + n_tiered
         hit_tokens = 0
         clone = 0
+        if prompt is not None and len(prompt) > 1 and total:
+            hit_tokens = min(total * self.block_size, len(prompt) - 1)
+            clone = int(total * self.block_size >= len(prompt))
+        need = self.blocks_for(kv_len) - total + clone
+        return hit_tokens, need
+
+    def _plan(
+        self, kv_len: int, prompt
+    ) -> Tuple[List[int], List[_RadixNode], int, int]:
+        """Admission plan: (resident hit pages, restorable tiered nodes,
+        hit tokens, pages to reserve). Tiered hits are *extra* immediate
+        allocations on top of the reservation — admission restores their
+        payloads into fresh HBM pages before the first prefill round."""
+        hit_pages: List[int] = []
+        tiered: List[_RadixNode] = []
         if self.prefix is not None and prompt is not None and len(prompt) > 1:
-            hit_pages = self.prefix.lookup(prompt)
-            hit_tokens = min(len(hit_pages) * self.block_size, len(prompt) - 1)
-            clone = int(
-                bool(hit_pages)
-                and len(hit_pages) * self.block_size >= len(prompt)
-            )
-        need = self.blocks_for(kv_len) - len(hit_pages) + clone
-        return hit_pages, hit_tokens, need
+            if self.tier is not None:
+                hit_pages, chain = self.prefix.lookup_chain(prompt)
+                for node in chain:  # contiguous run of present payloads
+                    if node.key not in self.tier:
+                        break
+                    tiered.append(node)
+            else:
+                hit_pages = self.prefix.lookup(prompt)
+        hit_tokens, need = self._hit_arithmetic(
+            kv_len, prompt, len(hit_pages), len(tiered)
+        )
+        return hit_pages, tiered, hit_tokens, need
 
     def can_admit(self, kv_len: int, prompt=None) -> bool:
-        hit_pages, _, need = self._plan(kv_len, prompt)
+        hit_pages, tiered, _, need = self._plan(kv_len, prompt)
         headroom = self.free_blocks - self.reserved_blocks
         if self.prefix is not None:
             # index-only pages are reclaimable headroom — minus the hit
@@ -356,30 +578,122 @@ class PagedKVCache:
                 1 for p in hit_pages if self.allocator.ref_count(p) == 1
             )
             headroom += self.prefix.evictable_count() - hit_idx_only
-        return headroom >= need
+        return headroom >= need + len(tiered)
 
     def admit(self, rid: int, kv_len: int, prompt=None) -> int:
         """Admit a request: pin its longest cached prompt prefix (if a
-        prefix index is installed and `prompt` is given) and reserve pages
-        for the rest of its worst case. Returns the prefix-hit token count
-        — prompt tokens whose KV the request shares instead of computing."""
+        prefix index is installed and `prompt` is given), restore any
+        tier-resident continuation of that prefix into fresh HBM pages
+        (checksum-verified; a corrupt or missing payload truncates the hit
+        and drops the damaged subtree — the prompt tail is recomputed, the
+        engine never crashes and never emits a wrong token), and reserve
+        pages for the rest of its worst case. Returns the prefix-hit token
+        count — prompt tokens whose KV the request shares or restores
+        instead of computing."""
         if rid in self._tables:
             raise ValueError(f"request {rid} already admitted")
-        hit_pages, hit_tokens, need = self._plan(kv_len, prompt)
+        hit_pages, tiered, hit_tokens, need = self._plan(kv_len, prompt)
+        # verify payloads host-side before touching any allocator state:
+        # the chain is only restorable up to the first damaged payload
+        verified: List[Tuple[_RadixNode, Dict[str, np.ndarray]]] = []
+        for node in tiered:
+            payload = self.tier.get(node.key)
+            planes = None if payload is None else unpack_payload(payload)
+            if planes is None:
+                if payload is not None:
+                    self.tier.corrupt_pages += 1
+                self.tier.fallback_recomputes += 1
+                self.prefix.drop_subtree(node)
+                hit_tokens, need = self._hit_arithmetic(
+                    kv_len, prompt, len(hit_pages), len(verified)
+                )
+                break
+            verified.append((node, planes))
         for p in hit_pages:
             self.allocator.incref(p)
+        want = need + len(verified)
         headroom = self.free_blocks - self.reserved_blocks
-        if need > headroom and self.prefix is not None:
-            headroom += self.prefix.evict(need - headroom)
-        if need > headroom:
+        if want > headroom and self.prefix is not None:
+            headroom += self.reclaim_index_pages(want - headroom)
+        if want > headroom:
             self.allocator.free(hit_pages)  # roll back the prefix pins
             raise RuntimeError(
                 f"admitting request {rid} would oversubscribe the pool"
             )
-        self._tables[rid] = list(hit_pages)
+        restored: List[int] = []
+        for node, planes in verified:
+            b = self.allocator.alloc()  # index reference
+            self.tier.pop(node.key)
+            self.prefix.restore_node(node, b)
+            self.allocator.incref(b)  # the request's reference
+            self._pending_restores.append((b + 1, planes))
+            self.tier.restored_pages += 1
+            restored.append(b)
+        self._tables[rid] = list(hit_pages) + restored
         self._reserved[rid] = need
         self.prefix_hit_tokens += hit_tokens
+        if restored:
+            self.tier_hit_tokens += min(
+                len(restored) * self.block_size,
+                max(0, hit_tokens - len(hit_pages) * self.block_size),
+            )
         return hit_tokens
+
+    # -- host-tier spill / restore (DESIGN.md §18) ---------------------------
+
+    def _extract_payload(self, page: int):
+        """Pack allocator page `page`'s pool planes into a checksummed
+        tier payload (allocator page `a` is device page `a + 1`)."""
+        return pack_payload(
+            extract_page_planes(self.pools, page + 1), self.kv_quant
+        )
+
+    def reclaim_index_pages(self, n_pages: int) -> int:
+        """Reclaim up to `n_pages` index-only pages for admission headroom.
+        With a host tier installed the victims *spill* — their content
+        survives as checksummed host payloads and a later hit restores
+        them; without one they are dropped (the pre-§18 behaviour).
+        Returns pages returned to the free list."""
+        if self.prefix is None or n_pages <= 0:
+            return 0
+        if self.tier is not None:
+            return self.prefix.spill(n_pages, self._extract_payload)
+        return self.prefix.evict(n_pages)
+
+    def spill_all(self) -> int:
+        """Flush every reclaimable index page to the host tier — the
+        degradation ladder's `spill` rung: maximum admission headroom
+        without dropping a single cached prefix or parking anyone.
+        Returns pages returned to the free list."""
+        if self.prefix is None or self.tier is None:
+            return 0
+        return self.prefix.spill(self.num_blocks, self._extract_payload)
+
+    @property
+    def pending_restores(self) -> int:
+        return len(self._pending_restores)
+
+    def drain_restores(
+        self,
+    ) -> Optional[Tuple[np.ndarray, List[Dict[str, np.ndarray]]]]:
+        """Verified tier payloads staged by `admit`, as (device page ids,
+        per-page plane dicts) for the engine's upload step — which must run
+        before the jitted step that reads (or copy-on-write clones) those
+        pages; the scheduler drains this in `_prefill_rows` ahead of the
+        launch. Returns None when nothing is pending."""
+        if not self._pending_restores:
+            return None
+        pending, self._pending_restores = self._pending_restores, []
+        dev_pages = np.asarray([d for d, _ in pending], np.int32)
+        return dev_pages, [planes for _, planes in pending]
+
+    def tiered_hit_pages(self, prompt) -> int:
+        """Restorable tiered pages an admission of `prompt` would upload —
+        the TTFT gate prices the restore traffic with this (no LRU
+        side-effects)."""
+        if self.tier is None or self.prefix is None or prompt is None:
+            return 0
+        return self.prefix.tiered_hit_pages(prompt)
 
     def release(self, rid: int) -> None:
         """Idempotent teardown: drop the request's reference on every page
@@ -478,9 +792,15 @@ class PagedKVCache:
         drop this request's reference, freed pages are scrubbed on their
         next allocation, and pages still sitting in the un-drained fresh
         list are dropped from it. Returns pages returned to the free list.
-        Parking an unknown / already-released rid is a no-op."""
+        Parking an unknown or already-parked rid raises: unlike `release`
+        (reachable twice for one request via EOS-at-prefill + length-cap),
+        park is only ever driven by the scheduler's preemption path, which
+        holds the slot — a second park for the same rid would re-index a
+        table that no longer exists and silently corrupt the index."""
         if rid not in self._tables:
-            return 0
+            raise ValueError(
+                f"park of unknown or already-parked request {rid}"
+            )
         if tokens is not None and self.prefix is not None:
             self.prefix.insert(tokens, self._tables[rid])
         table = self._tables.pop(rid)

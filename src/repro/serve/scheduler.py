@@ -40,8 +40,16 @@ resident via `PagedKVCache.park` — when the pool blocks the queue head.
 Per-request deadlines drop expired queued work at admission time. Every
 request ends in exactly one `RequestStatus` (`Scheduler.statuses`); a
 `FaultInjector` hooks the round loop for chaos testing (pool exhaustion,
-straggler rounds, poisoned prefills), and the non-finite-logit guard at
-the prefill host sync fails only the poisoned request.
+straggler rounds, poisoned prefills, corrupted host-tier payloads), and
+the non-finite-logit guard at the prefill host sync fails only the
+poisoned request.
+
+Tiered KV durability (DESIGN.md §18): with a `HostTier` installed on the
+cache, the degradation ladder gains a `spill` rung (flush reclaimable
+index pages to host memory instead of dropping them), admission restores
+tier-resident prefix hits through checksum-verified uploads drained just
+before the prefill launch (`tier_restore_fn`), and `check_invariants`
+audits the tiered pages as a fourth conservation class.
 """
 from __future__ import annotations
 
@@ -113,6 +121,16 @@ STAT_UNITS: Dict[str, str] = {
     "itl_deferrals": "events (admissions deferred by the predicted-ITL gate)",
     "accepted_tokens_per_step": "tokens/call (tokens emitted per verify pass; "
                                 ">1 is the speculative-decode win)",
+    "tier_spilled_pages": "pages (pages spilled into the host tier, lifetime)",
+    "tier_restored_pages": "pages (verified tier payloads uploaded back "
+                           "into HBM pages, lifetime)",
+    "tier_pages": "pages (payloads resident in the host tier right now)",
+    "tier_bytes": "bytes (packed payload bytes resident in the host tier)",
+    "tier_corrupt": "pages (payloads that failed checksum verification)",
+    "tier_fallback_recompute": "events (admissions that recomputed a prefix "
+                               "because a tier payload was corrupt/missing)",
+    "tier_hit_tokens": "tokens (prompt tokens served from tier-restored "
+                       "pages instead of recomputed)",
 }
 
 
@@ -243,6 +261,7 @@ class Scheduler:
         sla: Optional[SLAPolicy] = None,
         injector=None,
         watchdog=None,
+        tier_restore_fn: Optional[Callable] = None,
     ):
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
@@ -270,6 +289,9 @@ class Scheduler:
         self.local_window = local_window
         self.prefill_chunk = prefill_chunk
         self._scrub = scrub_fn
+        # host-tier restore (DESIGN.md §18): uploads verified payloads into
+        # reserved HBM pages before the prefill launch that reads them
+        self._tier_restore = tier_restore_fn
         self._spec = spec_fn
         self.spec_k = spec_k
         self.spec_rounds = spec_rounds
@@ -404,6 +426,12 @@ class Scheduler:
                 # the next prefill launch NaNs one real row's logits; the
                 # host-sync guard must fail exactly that request
                 self._poison_pending = True
+            if inj.take(self._round, "corrupt_tier_page"):
+                # flip bytes in one stored host-tier payload: the next
+                # restore of that prefix must detect the damage and fall
+                # back to recompute — only the affected request pays
+                if self.cache.tier is not None:
+                    self.cache.tier.corrupt_one()
             if inj.take(self._round, "exhaust_pool"):
                 # transient pool exhaustion for this round: grab only the
                 # *unreserved* headroom — residents' reservations stay
@@ -563,6 +591,14 @@ class Scheduler:
                 bs = self.cache.block_size
                 span = math.ceil(max(1, len(r.prompt)) / bs) * bs
                 pred = lens.predict_prefill(1, span)
+                # a tier-resident prefix hit trades prefill compute for
+                # restore traffic (DESIGN.md §18): price the host->HBM
+                # upload so the gate accounts for the restore time too
+                n_tiered = self.cache.tiered_hit_pages(r.prompt)
+                if n_tiered:
+                    pred += lens.predict_tier_restore(
+                        n_tiered, self.cache.bytes_per_token() * bs
+                    )
             if not self.sla.ttft_breached(self._clock() - r.submit_t, pred):
                 return r
             self.queue.popleft()
@@ -620,8 +656,15 @@ class Scheduler:
             if rung == "prefix_evict":
                 if self.cache.prefix is not None:
                     need = self.cache.blocks_for(self._kv_len(head))
-                    if self.cache.prefix.evict(need) > 0:
+                    # with a host tier installed the reclaim spills (restore
+                    # latency later) instead of dropping (recompute later)
+                    if self.cache.reclaim_index_pages(need) > 0:
                         applied = rung
+            elif rung == "spill":
+                # flush every reclaimable index page to the host tier
+                # (DESIGN.md §18) — skipped without a tier
+                if self.cache.tier is not None and self.cache.spill_all() > 0:
+                    applied = rung
             elif rung == "spec_off":
                 if self._spec is not None and self._spec_enabled:
                     applied = rung
@@ -760,6 +803,24 @@ class Scheduler:
                 f"reservations ({self.cache.reserved_blocks}) exceed the "
                 f"free list ({alloc.free_count})"
             )
+        if self.cache.tier is not None:
+            # fourth conservation class (DESIGN.md §18): every tiered index
+            # node has exactly one tier payload under its content address,
+            # and vice versa — a drift either way means a page was lost
+            # (unresumable prefix) or leaked (unreachable payload)
+            idx_keys = sorted(self.cache.prefix.tier_keys())
+            tier_keys = sorted(self.cache.tier.keys())
+            if idx_keys != tier_keys:
+                raise RuntimeError(
+                    f"tiered-page drift: index holds {len(idx_keys)} tiered "
+                    f"nodes but the tier stores {len(tier_keys)} payloads"
+                )
+            if self.cache.prefix.tiered_count != self.cache.tier.pages:
+                raise RuntimeError(
+                    f"tiered-count drift: index says "
+                    f"{self.cache.prefix.tiered_count}, tier says "
+                    f"{self.cache.tier.pages}"
+                )
         return self.cache.occupancy()
 
     def _prefill_pending(self) -> None:
@@ -911,6 +972,31 @@ class Scheduler:
                     f"pages > pad_to={b * pages} and no scrub_fn installed"
                 )
             self._scrub(extra)
+        restores = self.cache.drain_restores()
+        if restores is not None:
+            # tier-restored pages (DESIGN.md §18): upload the verified
+            # payloads into their reserved HBM pages *before* the launch
+            # that reads through them — the restore is the page's full
+            # initialization (codes, scales, positions), so it needs no
+            # scrub and must not race the jitted step
+            if self._tier_restore is None:
+                raise ValueError(
+                    f"{len(restores[0])} pending tier restores and no "
+                    "tier_restore_fn installed"
+                )
+            rt0 = self._clock()
+            self._tier_restore(*restores)
+            rt1 = self._clock()
+            if self._obs_rooflens is not None:
+                self._obs_rooflens.observe_tier_restore(
+                    len(restores[0]),
+                    self.cache.bytes_per_token() * bs,
+                    rt1 - rt0,
+                )
+            if self._obs_metrics is not None:
+                self._obs_metrics.histogram(
+                    "serve.tier.restore_wall_s", unit="s"
+                ).record(rt1 - rt0)
         observing = (
             self._obs_tracer is not None or self._obs_rooflens is not None
             or self._obs_metrics is not None
@@ -997,6 +1083,11 @@ class Scheduler:
         # the prefill launch that caused them drains them — decode writing
         # a shared page would mean the plan in PagedKVCache._plan is wrong
         assert self.cache.pending_copies == 0, "unflushed CoW copies at decode"
+        # tier restores likewise only arise at admission, and the prefill
+        # launch that follows every admission drains them
+        assert self.cache.pending_restores == 0, (
+            "unflushed tier restores at decode"
+        )
         if self._spec is not None and self._spec_enabled:
             self._decode_active_spec(active)
         elif self.chunk > 1:
@@ -1427,6 +1518,7 @@ class Scheduler:
         m.gauge("serve.pool.prefix_cached_pages", unit="pages").set(
             occ["cached"]
         )
+        m.gauge("serve.pool.tiered_pages", unit="pages").set(occ["tiered"])
         m.gauge("serve.slots.active", unit="slots").set(
             sum(1 for r in self.slots if r is not None)
         )
@@ -1540,6 +1632,17 @@ class Scheduler:
         st["cow_copies"] = self.cache.cow_copies
         st["shared_pages"] = occ["shared"]
         st["prefix_cached_pages"] = occ["cached"]
+        # host-tier observables (DESIGN.md §18): lifetime spill/restore/
+        # corruption counters the tier owns, plus point-in-time residency;
+        # all read 0 on an engine without a tier
+        tier = self.cache.tier
+        st["tier_spilled_pages"] = tier.spilled_pages if tier else 0
+        st["tier_restored_pages"] = tier.restored_pages if tier else 0
+        st["tier_pages"] = tier.pages if tier else 0
+        st["tier_bytes"] = tier.payload_bytes if tier else 0
+        st["tier_corrupt"] = tier.corrupt_pages if tier else 0
+        st["tier_fallback_recompute"] = tier.fallback_recomputes if tier else 0
+        st["tier_hit_tokens"] = self.cache.tier_hit_tokens
         assert set(st) <= set(STAT_UNITS), (
             f"undocumented stats keys: {set(st) - set(STAT_UNITS)} — "
             "add units to STAT_UNITS"

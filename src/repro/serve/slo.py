@@ -17,10 +17,11 @@ consults one `SLAPolicy` at three points:
   pressure   the graceful-degradation ladder (see `LADDER`): when the pool
              blocks the queue head, the scheduler escalates one rung per
              blocked round — reclaim prefix-index-only pages, switch off
-             speculative rounds, shrink the chunked-prefill span, and
-             finally park the lowest-priority resident via
-             `PagedKVCache.park` — and relaxes back to rung 0 once the
-             queue drains.
+             speculative rounds, shrink the chunked-prefill span, flush
+             every reclaimable index page to the host tier (DESIGN.md §18;
+             skipped without a tier), and finally park the lowest-priority
+             resident via `PagedKVCache.park` — and relaxes back to rung 0
+             once the queue drains.
 
 Roofline predictions follow the `prefill_sla_s` template (PR 8): they gate
 only when a RoofLens is installed *and* bound; otherwise the policy degrades
@@ -59,8 +60,11 @@ class RequestStatus(str, enum.Enum):
 #: Degradation-ladder rungs, escalated strictly in this order, one rung per
 #: scheduler round in which the pool blocks the queue head (DESIGN.md §17).
 #: Rungs that do not apply to the engine build (no prefix index, no spec
-#: decode, monolithic prefill) are skipped in the same round.
-LADDER = ("prefix_evict", "spec_off", "prefill_shrink", "park")
+#: decode, monolithic prefill, no host tier) are skipped in the same round.
+#: `spill` sits deliberately before `park`: flushing cold index pages to
+#: the host tier costs only restore latency on the next hit, while parking
+#: costs a live request its slot.
+LADDER = ("prefix_evict", "spec_off", "prefill_shrink", "spill", "park")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -21,6 +21,7 @@ from repro.models.layers import (
     read_cache_kv,
     update_cache,
 )
+from repro.serve.host_tier import HostTier
 from repro.serve.paged_cache import BlockAllocator, PagedKVCache
 
 
@@ -552,6 +553,133 @@ def test_rollback_trims_tail_credits_reservation_and_regrows():
     assert cache.blocks_held(0) == 6 and cache._reserved[0] == 0
     cache.release(0)
     assert cache.allocator.free_count == 8
+
+
+# ---------------------------------------------------------------------------
+# host-tier spill / prefetch / restore invariants (PR 10)
+# ---------------------------------------------------------------------------
+
+# op stream for the tiered battery: admit (fresh prompts or a parked
+# request's folded history — either may now prefix-hit *tiered* pages and
+# restore them), append, park, spill (index reclaim routed into the host
+# tier), and evict — so restores, spills, CoW clones, and refcounted frees
+# all interleave
+_TOPS = st.lists(
+    st.tuples(st.sampled_from(["admit", "append", "park", "spill", "evict"]),
+              st.integers(0, 7), st.integers(1, 9)),
+    min_size=1, max_size=60,
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(ops=_TOPS, num_blocks=st.integers(8, 24), block_size=st.integers(1, 6))
+def test_tiered_spill_restore_conserves_four_classes(
+    ops, num_blocks, block_size
+):
+    """Four-way page conservation under random spill/prefetch/restore
+    interleavings: free + unique-held (live tables and resident index
+    nodes, shared pages once) always sums to the pool size on the HBM side,
+    while the fourth class — tiered pages — lives outside the pool with
+    exactly one tier payload per tiered index node (key sets match
+    one-to-one). Refcounts stay exact throughout: holders are live tables
+    plus resident index references, and a freshly restored page carries
+    both (index + admitting request)."""
+    bs = block_size
+    tier = HostTier()
+    cache = PagedKVCache(
+        _PoolStub(), num_blocks=num_blocks, block_size=bs,
+        prefix_cache=True, tier=tier,
+    )
+    base = list(range(1, 2 * bs + 1))
+    prompts = [
+        base,
+        base + list(range(100, 100 + bs + 1)),
+        list(range(300, 300 + 2 * bs + 1)),
+    ]
+    live = {}  # rid -> [prompt, kv_len budget, tokens written, inserted]
+    parked = []  # folded written histories awaiting re-admission
+    next_rid = 0
+    for kind, pick, n in ops:
+        if kind == "admit":
+            if parked and pick % 2:
+                prompt = parked[pick % len(parked)]
+            else:
+                prompt = prompts[pick % len(prompts)]
+            kv_len = len(prompt) + n
+            if (kv_len <= num_blocks * bs
+                    and cache.can_admit(kv_len, prompt)):
+                hit = cache.admit(next_rid, kv_len, prompt=prompt)
+                assert hit <= len(prompt) - 1
+                assert hit <= cache.blocks_held(next_rid) * bs
+                if prompt in parked:
+                    parked.remove(prompt)
+                live[next_rid] = [prompt, kv_len, hit, False]
+                next_rid += 1
+        elif kind == "park" and live:
+            rid = sorted(live)[pick % len(live)]
+            prompt, _, written, _ = live[rid]
+            history = (prompt + [10_000 + rid * 97 + j
+                                 for j in range(written - len(prompt))]
+                       )[:written]
+            cache.park(rid, history)
+            if len(history) >= bs:
+                parked.append(history)
+            del live[rid]
+        elif kind == "append" and live:
+            rid = sorted(live)[pick % len(live)]
+            prompt, kv_len, written, inserted = live[rid]
+            take = min(n, kv_len - written)
+            if take > 0:
+                slots = cache.write_slots(rid, written, take)
+                for s in slots.tolist():
+                    # CoW survives the restore path too: a write never
+                    # lands on a shared page (restored pages start shared
+                    # between the index and the admitting request)
+                    assert cache.allocator.ref_count(s // bs - 1) == 1
+                live[rid][2] = written + take
+            if not inserted and live[rid][2] >= len(prompt):
+                cache.prefix_insert(rid, prompt)
+                live[rid][3] = True
+        elif kind == "spill":
+            cache.reclaim_index_pages(n)
+        elif kind == "evict" and live:
+            rid = sorted(live)[pick % len(live)]
+            cache.release(rid)
+            del live[rid]
+        cache.drain_restores()  # the scheduler drains before every launch
+        cache.drain_copies(max(1, cache.pending_copies))
+        cache.drain_fresh_rows(num_blocks)
+
+        # HBM conservation: free + unique allocated pages == pool size
+        alloc = cache.allocator
+        assert alloc.free_count + alloc.used_count == num_blocks
+        occ = cache.occupancy()
+        assert (occ["free"] + (occ["used"] - occ["shared"]) + occ["shared"]
+                == num_blocks)
+        # the fourth class: tiered pages match the tier store one-to-one
+        assert occ["tiered"] == cache.prefix.tiered_count == tier.pages
+        assert sorted(cache.prefix.tier_keys()) == sorted(tier.keys())
+        assert cache.pending_restores == 0
+        # exact refcounts: holders are live tables + resident index nodes
+        holders = {}
+        for rid in live:
+            for p in cache._tables[rid]:
+                if p is not None:
+                    holders[p] = holders.get(p, 0) + 1
+        for p in _index_page_multiset(cache.prefix):
+            holders[p] = holders.get(p, 0) + 1
+        assert alloc.used_count == len(holders)
+        for p, c in holders.items():
+            assert alloc.ref_count(p) == c
+        assert cache.reserved_blocks <= alloc.free_count
+
+    for rid in list(live):
+        cache.release(rid)
+    occ = cache.occupancy()
+    assert occ["used"] == occ["cached"] == cache.prefix.pages
+    assert occ["tiered"] == tier.pages == cache.prefix.tiered_count
+    # lifetime counters only grow; the store never exceeds what was spilled
+    assert tier.spilled_pages >= tier.pages + tier.restored_pages
 
 
 @settings(max_examples=50, deadline=None)

@@ -72,8 +72,12 @@ def test_slapolicy_validates_and_predicates():
     assert not SLAPolicy(ttft_slo_s=1.0).ttft_breached(0.5, 0.4)
     assert SLAPolicy(itl_slo_s=0.1).itl_breached(0.9, 4)
     assert not SLAPolicy(itl_slo_s=0.1).itl_breached(0.2, 4)
-    assert LADDER == ("prefix_evict", "spec_off", "prefill_shrink", "park")
-    assert set(SERVING_FAULTS) == {"slow", "exhaust_pool", "poison_prefill"}
+    assert LADDER == (
+        "prefix_evict", "spec_off", "prefill_shrink", "spill", "park"
+    )
+    assert set(SERVING_FAULTS) == {
+        "slow", "exhaust_pool", "poison_prefill", "corrupt_tier_page"
+    }
 
 
 def test_fault_injector_take_consumes_once():

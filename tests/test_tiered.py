@@ -1,0 +1,479 @@
+"""Tiered KV durability tests (DESIGN.md §18): checksummed host-tier page
+spill, verified prefetch-on-resume, crash-safe prefix/session persistence,
+and the corrupt-payload chaos path. The contract under test: overload and
+restarts degrade into latency (spill, restore, recompute), never into lost
+sessions, recomputed prefixes, or wrong tokens."""
+import os
+from dataclasses import replace
+
+import numpy as np
+import pytest
+import jax
+
+from repro.checkpoint.ckpt import load_snapshot, save_snapshot
+from repro.configs.base import get_smoke_config
+from repro.core.codecs import codec_from_wire_id, codec_wire_id
+from repro.dist.fault import FaultInjector
+from repro.models.model import Model
+from repro.obs import MetricsRegistry, Observability, RoofLens
+from repro.serve.engine import GenerationEngine
+from repro.serve.host_tier import (
+    HostTier,
+    chain_key,
+    crc32c,
+    pack_payload,
+    unpack_payload,
+)
+from repro.serve.slo import RequestStatus
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = get_smoke_config("llama3-8b")
+    m = Model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _prompts(vocab, lengths, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, n).astype(np.int32) for n in lengths]
+
+
+def _engine(llama, **kw):
+    m, params = llama
+    kw.setdefault("max_len", 64)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("decode_chunk", 4)
+    return GenerationEngine(m, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# payload format: CRC32C, content keys, wire ids, pack/unpack
+# ---------------------------------------------------------------------------
+
+def test_crc32c_known_vector_and_streaming():
+    assert crc32c(b"") == 0
+    assert crc32c(b"123456789") == 0xE3069283  # the iSCSI check vector
+    # streamable: a chained partial CRC equals the one-shot CRC
+    assert crc32c(b"456789", crc32c(b"123")) == 0xE3069283
+    assert crc32c(b"123456789") != crc32c(b"123456798")
+
+
+def test_chain_key_is_a_content_address():
+    k1 = chain_key(b"", b"abc")
+    assert len(k1) == 16
+    assert k1 == chain_key(b"", b"abc")  # deterministic: survives restarts
+    assert chain_key(k1, b"abc") != k1  # same chunk, different path
+    assert chain_key(b"", b"abd") != k1
+
+
+def test_codec_wire_ids_are_pinned_and_roundtrip():
+    # the numeric ids are a wire format (payload headers, snapshots): the
+    # assignment is append-only and this pin catches an accidental reorder
+    names = ("none", "bf16", "bf8", "mxfp4", "int8", "int4", "nf4")
+    assert [codec_wire_id(n) for n in names] == list(range(len(names)))
+    for n in names:
+        assert codec_from_wire_id(codec_wire_id(n)) == n
+    with pytest.raises(ValueError):
+        codec_wire_id("zstd")
+    with pytest.raises(ValueError):
+        codec_from_wire_id(99)
+
+
+def test_payload_roundtrip_and_corruption_detection():
+    import ml_dtypes
+
+    rng = np.random.default_rng(0)
+    planes = {
+        "kp": rng.integers(0, 255, (2, 8, 2, 4), dtype=np.uint8),
+        "vp": rng.standard_normal((2, 8, 2, 4)).astype(ml_dtypes.bfloat16),
+        "ks": rng.standard_normal((2, 8, 2)).astype(np.float32),
+        "ppos": np.arange(8, dtype=np.int32),
+    }
+    p = pack_payload(planes, "int8")
+    assert p.codec == "int8" and p.wire_id == codec_wire_id("int8")
+    assert p.nbytes == len(p.blob) and p.crc == crc32c(p.blob)
+    out = unpack_payload(p)
+    assert set(out) == set(planes)
+    for k in planes:
+        assert out[k].dtype == planes[k].dtype
+        np.testing.assert_array_equal(
+            np.asarray(out[k], np.float32), np.asarray(planes[k], np.float32)
+        )
+    # every integrity failure degrades to None — never an exception
+    flipped = bytes([p.blob[0] ^ 1]) + p.blob[1:]
+    assert unpack_payload(replace(p, blob=flipped)) is None
+    assert unpack_payload(replace(p, blob=p.blob[:-1])) is None  # truncated
+    assert unpack_payload(replace(p, nbytes=p.nbytes - 1)) is None
+    assert unpack_payload(replace(p, planes=p.planes[:-1])) is None  # trailing
+
+
+def test_host_tier_capacity_lru_drop_notifies():
+    with pytest.raises(ValueError, match="capacity_pages"):
+        HostTier(capacity_pages=0)
+    drops = []
+    t = HostTier(capacity_pages=2)
+    t.on_drop = drops.append
+    p = pack_payload({"ppos": np.zeros(4, np.int32)}, "none")
+    t.put(b"a", p)
+    t.put(b"b", p)
+    t.get(b"a")  # refresh: b becomes the LRU victim
+    t.put(b"c", p)
+    assert drops == [b"b"]
+    assert t.pages == 2 and t.dropped_pages == 1 and t.spilled_pages == 3
+    assert b"a" in t and b"c" in t and t.get(b"b") is None
+    assert t.payload_bytes == 2 * p.nbytes
+
+
+def test_corrupt_one_is_deterministic_and_detected():
+    t = HostTier()
+    assert t.corrupt_one() is None  # empty tier: chaos hook is a no-op
+    p = pack_payload({"ppos": np.arange(4, dtype=np.int32)}, "none")
+    t.put(b"k2", p)
+    t.put(b"k1", p)
+    assert t.corrupt_one() == b"k1"  # smallest key: seeded schedules replay
+    assert unpack_payload(t.get(b"k1")) is None
+    assert unpack_payload(t.get(b"k2")) is not None
+    # empty-blob payloads (device-poolless stubs) corrupt via the stored crc
+    t2 = HostTier()
+    t2.put(b"e", pack_payload({}, "none"))
+    assert t2.corrupt_one() == b"e"
+    assert unpack_payload(t2.get(b"e")) is None
+
+
+# ---------------------------------------------------------------------------
+# park validation regression (PR 10 satellite)
+# ---------------------------------------------------------------------------
+
+class _PoolStub:
+    """Model stand-in: bookkeeping tests don't need device pools."""
+
+    class cfg:
+        kv_quant = "none"
+
+    def init_paged_cache(self, num_blocks, block_size, dtype=None,
+                         kv_quant=None):
+        return {}
+
+
+def test_park_rejects_unknown_and_already_parked_rids():
+    """Park regression: unlike `release` (legitimately reachable twice for
+    one request via EOS-at-prefill + length cap), park is only driven by
+    the scheduler's preemption path — a second park for the same rid would
+    re-index a table that no longer exists, so it raises instead of
+    silently corrupting the prefix index."""
+    from repro.serve.paged_cache import PagedKVCache
+
+    cache = PagedKVCache(
+        _PoolStub(), num_blocks=4, block_size=2, prefix_cache=True
+    )
+    with pytest.raises(ValueError, match="unknown or already-parked"):
+        cache.park(0)
+    cache.admit(0, 4)
+    cache.write_slots(0, 0, 4)
+    cache.park(0, [1, 2, 3, 4])
+    with pytest.raises(ValueError, match="unknown or already-parked"):
+        cache.park(0, [1, 2, 3, 4])
+    with pytest.raises(ValueError, match="unknown or already-parked"):
+        cache.park(99)
+    # release, by contrast, stays idempotent (and the parked history's
+    # pages survive in the index)
+    cache.release(0)
+    cache.release(0)
+    assert cache.prefix.pages == 2
+
+
+# ---------------------------------------------------------------------------
+# snapshot file format (checkpoint/ckpt.py)
+# ---------------------------------------------------------------------------
+
+def test_save_load_snapshot_roundtrip_and_atomicity(tmp_path):
+    import ml_dtypes
+
+    d = str(tmp_path / "snap")
+    arrays = {
+        "node/0/blob": np.frombuffer(b"hello", np.uint8),
+        "w": np.arange(4, dtype=np.float32).astype(ml_dtypes.bfloat16),
+        "empty": np.zeros(0, np.uint8),
+    }
+    meta = {"version": 1, "nodes": [{"crc": 123, "planes": [["kp", [2], "u1"]]}]}
+    save_snapshot(d, arrays, meta)
+    arr2, meta2 = load_snapshot(d)
+    assert meta2 == meta
+    assert arr2["w"].dtype == ml_dtypes.bfloat16  # bf16 round-trips as bits
+    np.testing.assert_array_equal(
+        np.asarray(arr2["w"], np.float32), np.arange(4, dtype=np.float32)
+    )
+    assert bytes(arr2["node/0/blob"]) == b"hello"
+    assert arr2["empty"].size == 0
+    # a second save replaces the directory wholesale (atomic publish)
+    save_snapshot(d, {"only": np.ones(1)}, {"version": 1})
+    arr3, _ = load_snapshot(d)
+    assert set(arr3) == {"only"}
+    assert not os.path.exists(d + ".tmp")
+    with pytest.raises(FileNotFoundError, match="no complete snapshot"):
+        load_snapshot(str(tmp_path / "missing"))
+
+
+# ---------------------------------------------------------------------------
+# RoofLens: tier-restore traffic is a priced regime
+# ---------------------------------------------------------------------------
+
+def test_rooflens_tier_restore_regime_prices_and_calibrates():
+    lens = RoofLens()
+    lens.bind(cfg=get_smoke_config("llama3-8b"), weight_bytes=10 ** 6,
+              kv_quant=None, m_slots=2)
+    one = lens.predict_tier_restore(1, 4096.0)
+    assert one > 0.0
+    assert lens.predict_tier_restore(4, 4096.0) > one  # monotone in pages
+    assert lens.predict_tier_restore(1, 16384.0) > one  # and in page bytes
+    lens.observe_tier_restore(2, 4096.0, 7.0 * lens._raw_tier_restore(2, 4096.0))
+    scale = lens.calibrate()
+    assert scale["tier_restore"] == pytest.approx(7.0)
+    assert lens.predict_tier_restore(1, 4096.0) == pytest.approx(7.0 * one)
+
+
+# ---------------------------------------------------------------------------
+# engine: spill -> verified restore, bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_quant", ["bf8", "int8"])
+def test_spill_restore_bit_identical(llama, kv_quant):
+    """A spilled prefix restored from the tier serves the same tokens as an
+    always-resident one: the payload is the codec's exact packed planes, so
+    the re-admitted request reads bit-identical KV."""
+    vocab = llama[0].cfg.vocab_size
+    (pa,) = _prompts(vocab, (17,))
+    kw = dict(num_blocks=16, prefix_cache=True, host_tier=True,
+              kv_quant=kv_quant)
+    eng = _engine(llama, **kw)
+    a = eng.submit(pa, max_new_tokens=8)
+    res1 = eng.run_until_drained()[a]
+    assert eng.kv.prefix.pages == 2  # 17 tokens -> 2 full indexed pages
+    assert eng.kv.spill_all() == 2
+    occ = eng.scheduler.check_invariants()
+    assert occ["tiered"] == 2 and occ["cached"] == 0 and occ["used"] == 0
+    b = eng.submit(pa, max_new_tokens=8)
+    res2 = eng.run_until_drained()[b]
+    np.testing.assert_array_equal(res2, res1)
+    st = eng.scheduler.stats()
+    assert st["tier_spilled_pages"] == 2
+    assert st["tier_restored_pages"] == 2
+    assert st["tier_hit_tokens"] == 16  # both pages served from the tier
+    assert st["tier_corrupt"] == 0 and st["tier_fallback_recompute"] == 0
+    eng.scheduler.check_invariants()
+    # and both runs equal a tier-free engine's output
+    ref = _engine(llama, num_blocks=16, prefix_cache=True, kv_quant=kv_quant)
+    r = ref.submit(pa, max_new_tokens=8)
+    np.testing.assert_array_equal(ref.run_until_drained()[r], res1)
+
+
+def test_admission_pressure_spills_instead_of_dropping(llama):
+    """Index reclaim under admission pressure routes victims into the tier:
+    the evicted prefix is *not* lost — a later hit restores it instead of
+    recomputing."""
+    vocab = llama[0].cfg.vocab_size
+    pa, pb = _prompts(vocab, (17, 33))
+    eng = _engine(llama, max_slots=1, num_blocks=6, prefix_cache=True,
+                  host_tier=True)
+    a = eng.submit(pa, max_new_tokens=4)
+    res_a = eng.run_until_drained()[a]
+    assert eng.kv.prefix.pages == 2
+    # b needs 5 of 6 pages with only 4 free: admission reclaims index pages
+    b = eng.submit(pb, max_new_tokens=4)
+    eng.run_until_drained()
+    assert eng.scheduler.stats()["tier_spilled_pages"] >= 1
+    eng.scheduler.check_invariants()
+    a2 = eng.submit(pa, max_new_tokens=4)
+    res_a2 = eng.run_until_drained()[a2]
+    np.testing.assert_array_equal(res_a2, res_a)
+    st = eng.scheduler.stats()
+    assert st["tier_restored_pages"] >= 1
+    assert st["tier_fallback_recompute"] == 0
+    eng.scheduler.check_invariants()
+
+
+def test_tier_restore_metrics_and_gauges(llama):
+    vocab = llama[0].cfg.vocab_size
+    (pa,) = _prompts(vocab, (17,))
+    obs = Observability(metrics=MetricsRegistry())
+    eng = _engine(llama, prefix_cache=True, host_tier=True, obs=obs)
+    a = eng.submit(pa, max_new_tokens=4)
+    eng.run_until_drained()
+    eng.kv.spill_all()
+    b = eng.submit(pa, max_new_tokens=4)
+    eng.run_until_drained()
+    # the restore upload was timed, and the tiered-pages gauge is fresh
+    assert obs.metrics.histogram("serve.tier.restore_wall_s", unit="s").count >= 1
+    assert (obs.metrics.gauge("serve.pool.tiered_pages", unit="pages").value
+            == eng.kv.occupancy()["tiered"])
+    del a, b
+
+
+# ---------------------------------------------------------------------------
+# chaos: corrupt_tier_page degrades to recompute, never a wrong token
+# ---------------------------------------------------------------------------
+
+def test_corrupt_payload_falls_back_to_recompute(llama):
+    """Direct corruption: the damaged chain recomputes (correct output, no
+    crash), the counters tick, and the audit stays balanced."""
+    vocab = llama[0].cfg.vocab_size
+    (pa,) = _prompts(vocab, (17,))
+    eng = _engine(llama, num_blocks=16, prefix_cache=True, host_tier=True)
+    a = eng.submit(pa, max_new_tokens=8)
+    res1 = eng.run_until_drained()[a]
+    eng.kv.spill_all()
+    assert eng.tier.corrupt_one() is not None
+    b = eng.submit(pa, max_new_tokens=8)
+    res2 = eng.run_until_drained()[b]
+    np.testing.assert_array_equal(res2, res1)  # recompute, same tokens
+    st = eng.scheduler.stats()
+    assert st["tier_corrupt"] == 1
+    assert st["tier_fallback_recompute"] == 1
+    eng.scheduler.check_invariants()
+
+
+def test_corrupt_tier_page_fault_recomputes_only_affected(llama):
+    """The SERVING_FAULTS chaos path: `corrupt_tier_page` flips bytes in one
+    stored payload. Exactly one admission falls back to recompute, every
+    request (affected included) still emits the fault-free tokens, and the
+    tiered-page audit balances through the whole drain."""
+    vocab = llama[0].cfg.vocab_size
+    pa, pb = _prompts(vocab, (17, 33))
+    inj = FaultInjector()
+    eng = _engine(llama, prefix_cache=True, host_tier=True, injector=inj)
+    a = eng.submit(pa, max_new_tokens=6)
+    b = eng.submit(pb, max_new_tokens=6)
+    res1 = eng.run_until_drained()
+    eng.kv.spill_all()
+    assert eng.tier.pages == 6  # 2 + 4 prompt pages, both chains tiered
+    # schedule the corruption for the next round, while the payloads rest
+    inj.plan[eng.scheduler._round] = "corrupt_tier_page"
+    a2 = eng.submit(pa, max_new_tokens=6)
+    b2 = eng.submit(pb, max_new_tokens=6)
+    res2 = eng.run_until_drained()
+    assert any(k == "corrupt_tier_page" for _, k in inj.fired)
+    np.testing.assert_array_equal(res2[a2], res1[a])
+    np.testing.assert_array_equal(res2[b2], res1[b])
+    st = eng.scheduler.stats()
+    # one payload damaged -> one chain truncated -> one fallback; the
+    # untouched chain restores in full (>= its 2 pages)
+    assert st["tier_corrupt"] == 1
+    assert st["tier_fallback_recompute"] == 1
+    assert st["tier_restored_pages"] >= 2
+    assert eng.statuses[a2] == eng.statuses[b2] == RequestStatus.OK
+    eng.scheduler.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# snapshot / restore: sessions survive process death bit-identically
+# ---------------------------------------------------------------------------
+
+def _snapshot_restore_cycle(llama, tmp_path, kw):
+    """Run two sessions, snapshot mid-flight, restore into a fresh engine,
+    and check both the restored and the original engine finish every
+    session bit-identically to an uninterrupted reference."""
+    vocab = llama[0].cfg.vocab_size
+    pa, pb = _prompts(vocab, (17, 33))
+    ref = _engine(llama, **kw)
+    ra = ref.submit(pa, max_new_tokens=4)
+    rb = ref.submit(pb, max_new_tokens=12)
+    ref_res = ref.run_until_drained()
+
+    eng = _engine(llama, **kw)
+    a = eng.submit(pa, max_new_tokens=4)
+    b = eng.submit(pb, max_new_tokens=12)
+    eng.scheduler.step()
+    eng.scheduler.step()  # a finishes (undrained); b is mid-decode
+    snap = str(tmp_path / "snap")
+    counts = eng.snapshot(snap)
+    assert counts["nodes"] == eng.tier.pages > 0
+    assert counts["requests"] >= 1  # the mid-flight session parked
+
+    fresh = _engine(llama, **kw)
+    assert fresh.restore(snap) == counts
+    occ0 = fresh.kv.occupancy()
+    # warm start at zero HBM cost: every snapshot page is tier-resident
+    assert occ0["used"] == 0 and occ0["tiered"] == counts["nodes"]
+    res = fresh.run_until_drained()
+    # the parked session resumes bit-identically across process death: the
+    # fold_in(rid, output_index) key stream continues where it stopped
+    np.testing.assert_array_equal(res[b], ref_res[rb])
+    # the finished-but-undrained result survived too
+    np.testing.assert_array_equal(res[a], ref_res[ra])
+    assert fresh.statuses[b] == RequestStatus.OK
+    # the resume rode the tier (warm prefix restore, not a cold recompute)
+    st = fresh.scheduler.stats()
+    assert st["tier_restored_pages"] > 0 and st["tier_hit_tokens"] > 0
+    assert st["tier_fallback_recompute"] == 0
+    fresh.scheduler.check_invariants()
+
+    # snapshot is non-destructive: the original engine finishes b too
+    res_orig = eng.run_until_drained()
+    np.testing.assert_array_equal(res_orig[b], ref_res[rb])
+    eng.scheduler.check_invariants()
+
+
+@pytest.mark.parametrize("kv_quant,temperature",
+                         [("bf8", 0.0), ("int8", 0.7)])
+def test_snapshot_restore_resumes_bit_identically(
+    llama, tmp_path, kv_quant, temperature
+):
+    _snapshot_restore_cycle(llama, tmp_path, dict(
+        num_blocks=16, prefix_cache=True, host_tier=True,
+        kv_quant=kv_quant, temperature=temperature,
+    ))
+
+
+@pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >=2 devices (set XLA_FLAGS=--xla_force_host_platform_device_count)",
+)
+def test_snapshot_restore_resumes_bit_identically_mesh(llama, tmp_path):
+    from repro.launch.mesh import make_test_mesh
+
+    _snapshot_restore_cycle(llama, tmp_path, dict(
+        num_blocks=16, prefix_cache=True, host_tier=True,
+        kv_quant="int8", temperature=0.7, mesh=make_test_mesh(2, 1),
+    ))
+
+
+def test_restore_validates_compatibility(llama, tmp_path):
+    """Restore refuses anything that would break bit-identity or the
+    node<->payload audit: mismatched codec/seed/temperature, a non-fresh
+    engine, a missing snapshot, an undersized tier, a tier-less engine."""
+    vocab = llama[0].cfg.vocab_size
+    (pa,) = _prompts(vocab, (17,))
+    kw = dict(num_blocks=16, prefix_cache=True, host_tier=True,
+              kv_quant="int8")
+    eng = _engine(llama, **kw)
+    eng.submit(pa, max_new_tokens=4)
+    eng.run_until_drained()
+    snap = str(tmp_path / "snap")
+    eng.snapshot(snap)
+
+    with pytest.raises(ValueError, match="kv_quant mismatch"):
+        _engine(llama, **{**kw, "kv_quant": "bf8"}).restore(snap)
+    with pytest.raises(ValueError, match="seed mismatch"):
+        _engine(llama, seed=1, **kw).restore(snap)
+    with pytest.raises(ValueError, match="temperature mismatch"):
+        _engine(llama, temperature=0.5, **kw).restore(snap)
+    used = _engine(llama, **kw)
+    used.submit(pa, max_new_tokens=2)
+    used.run_until_drained()
+    with pytest.raises(RuntimeError, match="fresh engine"):
+        used.restore(snap)
+    with pytest.raises(ValueError, match="capacity"):
+        _engine(llama, **{**kw, "host_tier": HostTier(capacity_pages=1)}
+                ).restore(snap)
+    with pytest.raises(FileNotFoundError):
+        _engine(llama, **kw).restore(str(tmp_path / "missing"))
+    plain = _engine(llama, prefix_cache=True)
+    with pytest.raises(RuntimeError, match="host_tier"):
+        plain.snapshot(snap)
+    with pytest.raises(RuntimeError, match="host_tier"):
+        plain.restore(snap)
+    # host_tier itself requires the prefix index (content-keyed payloads)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        _engine(llama, host_tier=True)
